@@ -1,0 +1,35 @@
+"""Paper Section 9 (Fig 7): modeled gradient-communication component.
+
+One GPT-2 XL gradient payload (~1.56B params) aggregated over 32 DP workers
+on v5e ICI constants, per path.  Like the paper's figure these are modeled
+communication times for the gradient component only — not end-to-end step
+speedups.  SignOfMean is included only as the optimizer reference (its
+communication is the FP32 path, the sign is taken after the mean).
+"""
+from repro.core.modes import AggregationMode, Schedule
+from repro.core.traffic import (GPT2_XL_PARAMS, IciModel, modeled_comm_time,
+                                wire_bytes_per_device)
+
+W = 32
+PATHS = [
+    ("fp32_ring_allreduce", AggregationMode.FP32, Schedule.PSUM),
+    ("gbinary_vote_psum", AggregationMode.G_BINARY, Schedule.VOTE_PSUM),
+    ("gbinary_packed_a2a", AggregationMode.G_BINARY, Schedule.PACKED_A2A),
+    ("gternary_packed_a2a", AggregationMode.G_TERNARY, Schedule.PACKED_A2A),
+    ("majority_sign_sgd(sw)", AggregationMode.G_BINARY, Schedule.VOTE_PSUM),
+    ("sign_of_mean(ref)", AggregationMode.FP32, Schedule.PSUM),
+]
+
+
+def rows():
+    out = []
+    ici = IciModel()
+    base = None
+    for name, mode, sched in PATHS:
+        t = modeled_comm_time(GPT2_XL_PARAMS, mode, sched, W, ici)
+        b = wire_bytes_per_device(GPT2_XL_PARAMS, mode, sched, W)
+        if base is None:
+            base = t
+        out.append((f"comm_model/gpt2xl/{name}", t * 1e6,
+                    f"wire={b/2**30:.2f}GiB speedup={base/t:.1f}x"))
+    return out

@@ -1,0 +1,80 @@
+"""Paper Section 5 (Table 4, Fig 2-3): datapath timing exposure, TPU-adapted.
+
+Two evidence sources:
+  * measured wall-time of the controller-datapath kernels on the functional
+    (interpret) path — the byte-exact reference implementation;
+  * the analytic exposure model with v5e constants:
+    T_exposed = max(0, T_agg - T_overlap), swept over link bandwidth,
+    datapath depth, admitted fraction, and telemetry staleness (Fig 3
+    panels a-d).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kernels as K
+from repro.core.exposure import ExposureModel, TpuDatapathModel, envelope_sweep
+from repro.core.traffic import wire_bytes_per_device
+from repro.core.modes import AggregationMode, Schedule
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def rows():
+    out = []
+    rng = np.random.RandomState(0)
+    w, m = 8, 2048                      # 8 workers, 2048x128 plane (256 KiB)
+    plane = jnp.asarray(rng.randn(m, 128), jnp.float32)
+    stack = jnp.stack([K.pack_signs(jnp.asarray(rng.randn(m, 128),
+                                                jnp.float32))
+                       for _ in range(w)])
+    counts = K.popcount_stack(stack)
+    gate = K.ternary_gate_words(m)
+    sw, mw = K.majority_decode(counts, num_workers=w, gate_words=gate)
+
+    out.append(("datapath/pack_signs_256KiB", _time(K.pack_signs, plane),
+                f"elements={m*128}"))
+    out.append(("datapath/popcount_w8", _time(K.popcount_stack, stack),
+                "W=8"))
+    out.append(("datapath/majority_decode",
+                _time(lambda c: K.majority_decode(c, num_workers=w,
+                                                  gate_words=gate), counts),
+                "ternary-gated"))
+    out.append(("datapath/unpack_ternary", _time(K.unpack_ternary, sw, mw),
+                ""))
+    out.append(("datapath/apply_sign_update",
+                _time(lambda p: K.apply_sign_update(p, sw, mw, 0.01), plane),
+                "fused"))
+
+    # Table 4 analogue: modeled exposure at the production operating point
+    n = 8 << 20                      # 8M-element bucket
+    model = ExposureModel()
+    for sched, tag in ((Schedule.VOTE_PSUM, "vote_psum"),
+                       (Schedule.PACKED_A2A, "packed_a2a")):
+        wb = wire_bytes_per_device(n, AggregationMode.G_BINARY, sched, 32)
+        r = model.exposed(n, 32, wb)
+        out.append((f"exposure/{tag}", r["t_agg_s"] * 1e6,
+                    f"exposed_pct={r['exposed_pct']:.2f} hidden={r['hidden']}"))
+
+    # Fig 3 envelope sweep
+    sweep = envelope_sweep()
+    worst_a = max(sweep["a"], key=lambda r: r["exposed_pct"])
+    out.append(("exposure/envelope_worst_a", worst_a["t_exposed_s"] * 1e6,
+                f"link={worst_a['link_gbps']}GBps depth={worst_a['depth_mult']}x "
+                f"exposed={worst_a['exposed_pct']:.2f}pct"))
+    hidden_frac = np.mean([r["hidden"] for r in sweep["a"]])
+    out.append(("exposure/envelope_hidden_fraction", 0.0,
+                f"{hidden_frac:.2f} of (bw x depth) grid fully hidden"))
+    d10 = [r for r in sweep["d"] if r["stale_steps"] == 10][0]
+    out.append(("exposure/telemetry_staleness_10steps", 0.0,
+                f"amortized_cost={d10['amortized_step_cost_pct']:.3f}pct"))
+    return out

@@ -1,0 +1,54 @@
+"""Paper Section 10 (Table 7, Fig 8): datapath hardware-cost analogue.
+
+The paper bounds its 512-bit datapath with gate-equivalents and FPGA
+routing; the TPU analogue bounds the Pallas datapath with its structural
+costs: VMEM block footprint, vector-ops per value, modeled VPU cycles per
+64-byte "line" at the v5e clock, swept over block widths (the paper's
+width sweep).  Plus measured interpret-path throughput as the functional
+reference.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kernels as K
+from repro.core.exposure import TpuDatapathModel
+
+
+def rows():
+    out = []
+    model = TpuDatapathModel()
+    w = 8
+
+    # Table 7 analogue: per-stage structural cost of the 32-sign word path
+    ops_per_value = {
+        "pack": model.ops_per_value_pack,
+        "popcount_w8": model.ops_per_value_popcount_per_worker * w,
+        "majority": model.ops_per_value_majority,
+        "unpack": model.ops_per_value_unpack,
+    }
+    total_ops = sum(ops_per_value.values())
+    line_values = 512            # one 64-byte CXL line = 512 sign bits
+    cycles_per_line = total_ops * line_values / model.vpu_lanes
+    out.append(("hardware/vpu_cycles_per_512b_line", 0.0,
+                f"{cycles_per_line:.2f} cycles @ {model.clock_hz/1e6:.0f}MHz "
+                f"(paper: 5-cycle 512-bit datapath)"))
+    for stage, ops in ops_per_value.items():
+        out.append((f"hardware/ops_per_value/{stage}", 0.0, f"{ops:.3f}"))
+
+    # Fig 8 analogue: width sweep — VMEM footprint + throughput per block
+    rng = np.random.RandomState(0)
+    for wb in (1, 2, 4, 8, 16):
+        rows_v = 32 * wb
+        plane = jnp.asarray(rng.randn(rows_v * 8, 128), jnp.float32)
+        t0 = time.perf_counter()
+        r = K.pack_signs(plane)
+        jax.block_until_ready(r)
+        vmem_kib = (rows_v * 128 * 4 + wb * 128 * 4) / 1024
+        out.append((f"hardware/width_sweep/block_words_{wb}",
+                    (time.perf_counter() - t0) * 1e6,
+                    f"vmem_block={vmem_kib:.0f}KiB "
+                    f"signs_per_block={rows_v*128}"))
+    return out

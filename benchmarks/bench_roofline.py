@@ -1,0 +1,39 @@
+"""Roofline table reader: per (arch x shape x plan x mesh) from the dry-run.
+
+Reads ``results/dryrun`` JSONs (produced by ``repro.launch.dryrun``) and
+emits the three roofline terms, the dominant bottleneck, and the
+useful-FLOP ratio.  This is the §Roofline source of record.
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def rows():
+    out = []
+    files = sorted(glob.glob(os.path.join(RESULTS, "*", "*", "*.json")))
+    if not files:
+        return [("roofline/no_results", 0.0,
+                 "run: python -m repro.launch.dryrun")]
+    for f in files:
+        d = json.load(open(f))
+        mesh = d.get("mesh_name", "?")
+        tag = f"{mesh}/{d.get('arch')}/{d.get('shape')}"
+        if "skipped" in d:
+            out.append((f"roofline/{tag}", 0.0, "SKIP:" + d["skipped"][:40]))
+            continue
+        if "error" in d:
+            out.append((f"roofline/{tag}", 0.0, "ERROR"))
+            continue
+        r = d["roofline"]
+        plan = d.get("plan", "?")
+        out.append((
+            f"roofline/{tag}/{plan}",
+            r["step_time_lower_bound_s"] * 1e6,
+            f"dom={r['dominant']} comp={r['compute_s']:.4f}s "
+            f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"useful={r.get('useful_flop_ratio', 0):.2f}"))
+    return out

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_datapath     — Table 4 / Fig 2-3 (timing exposure, TPU-adapted)
+  bench_functional   — Section 6 (mode-specific byte-exact oracles)
+  bench_convergence  — Fig 4 / Fig 5 / Tables 5-6 (regimes + boundary)
+  bench_recovery     — Fig 6 (guarded-recovery control pilot)
+  bench_comm_model   — Fig 7 (modeled gradient-communication component)
+  bench_hardware     — Table 7 / Fig 8 (datapath cost analogue)
+  bench_roofline     — §Roofline source (reads results/dryrun)
+
+Usage: python -m benchmarks.run [--only datapath,comm_model]
+"""
+import argparse
+import sys
+import time
+
+MODULES = ("datapath", "functional", "hardware", "comm_model", "roofline",
+           "recovery", "convergence")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        if mod not in selected:
+            continue
+        t0 = time.time()
+        try:
+            m = __import__(f"benchmarks.bench_{mod}", fromlist=["rows"])
+            for name, us, derived in m.rows():
+                print(f"{name},{us:.2f},{str(derived).replace(',', ';')}",
+                      flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"bench_{mod}/ERROR,0,{type(e).__name__}: "
+                  f"{str(e)[:120].replace(',', ';')}", flush=True)
+        print(f"bench_{mod}/elapsed_s,{(time.time()-t0)*1e6:.0f},",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

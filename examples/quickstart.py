@@ -1,0 +1,50 @@
+"""Quickstart: train a small LM with NEURON-Fabric low-bit gradient
+aggregation on simulated devices, watching traffic drop ~28x for the
+admitted backbone while loss converges.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs import get_config
+from repro.core import AdmissionPlan, AggregationMode, Schedule
+from repro.data import SyntheticLMStream
+from repro.optim import AdamW
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    # 8 simulated devices: 4-way data parallel x 2-way tensor parallel
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+    cfg = get_config("qwen3_0p6b", smoke=True)      # reduced qwen3 family
+    data = SyntheticLMStream(vocab=cfg.vocab_size, seq_len=64, batch=16,
+                             seed=0)
+
+    # The paper's recovered operating point: G-Binary backbone via the
+    # packed controller schedule, FP32 head/embeddings/norms.
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
+                                         schedule=Schedule.PACKED_A2A)
+
+    trainer = Trainer(cfg, mesh, AdamW(peak_lr=2e-3, total_steps=200),
+                      data, plan=plan,
+                      tcfg=TrainerConfig(dp_axes=("data",), log_interval=20))
+    history = trainer.run(120)
+
+    first, last = history[0], history[-1]
+    print(f"\nloss {first['loss']:.3f} -> {last['loss']:.3f} over "
+          f"{len(history)} steps")
+    print(f"gradient traffic vs FP32: {last['traffic_ratio']:.4f} "
+          f"(G-Binary backbone + FP32 head)")
+    assert last["loss"] < first["loss"], "did not converge"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving example: prefill + decode with the production sharding.
+
+Decodes a batch of sequences with the KV cache sharded (batch over DP,
+cache sequence over the model axis) — the same code path the decode_32k /
+long_500k dry-run cells lower.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.configs import get_config
+from repro.models import init_cache, init_params
+from repro.runtime import build_serve_step
+
+BATCH, MAX_SEQ, DECODE_TOKENS = 8, 64, 24
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    cfg = get_config("qwen3_0p6b", smoke=True)
+    with jax.set_mesh(mesh):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        step, sh = build_serve_step(cfg, mesh, batch=BATCH, max_seq=MAX_SEQ,
+                                    dp_axes=("data",))
+        params = jax.device_put(params, sh["params"])
+        cache = jax.device_put(init_cache(cfg, BATCH, MAX_SEQ), sh["cache"])
+        tok = jax.device_put(
+            jnp.asarray(np.random.randint(0, cfg.vocab_size, (BATCH, 1)),
+                        jnp.int32), sh["token"])
+
+        outs = []
+        t0 = time.perf_counter()
+        for t in range(DECODE_TOKENS):
+            logits, cache = step(params, tok, cache, jnp.int32(t))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            tok = jax.device_put(tok, sh["token"])
+            outs.append(np.asarray(tok)[:, 0])
+        dt = time.perf_counter() - t0
+
+    gen = np.stack(outs, 1)
+    print(f"decoded {DECODE_TOKENS} tokens x {BATCH} seqs in {dt:.2f}s "
+          f"({BATCH*DECODE_TOKENS/dt:.1f} tok/s on CPU-sim)")
+    print("first sequence:", gen[0][:16], "...")
+    assert gen.shape == (BATCH, DECODE_TOKENS)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""NEURON-Fabric on TPU: low-bit gradient aggregation for distributed training.
+
+JAX (+ Pallas) implementation of Wang, Huang & Lung, "NEURON-Fabric:
+CXL-Side Low-Bit Gradient Aggregation for Distributed Training"
+(CS.DC 2026), adapted to the TPU ICI collective path.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

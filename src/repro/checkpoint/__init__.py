@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing (atomic, retained, reshard-on-load)."""
+from .manager import CheckpointManager, restore_latest, save_checkpoint
+
+__all__ = ["CheckpointManager", "restore_latest", "save_checkpoint"]

@@ -1,0 +1,42 @@
+"""hymba-1.5b [hybrid]: parallel attention + Mamba-style SSM heads.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16
+[arXiv:2411.13676].  Every layer fuses a GQA path and a selective-SSM
+path on the same input (outputs averaged); attention is sliding-window
+except the first / middle / last layers (global), per the Hymba recipe.
+Meta-tokens are omitted (noted in DESIGN.md).
+"""
+from ..models import ModelConfig, SsmConfig
+
+FULL = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    sliding_window=1024,
+    hybrid_parallel=True,
+    ssm=SsmConfig(state_size=16, variant="mamba_head"),
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke",
+    family="hybrid",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    sliding_window=16,
+    hybrid_parallel=True,
+    ssm=SsmConfig(state_size=4, variant="mamba_head"),
+    dtype="float32",
+    remat=False,
+    full_size=False,
+)

@@ -1,0 +1,44 @@
+"""whisper-tiny [audio]: encoder-decoder with conv frontend STUB.
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 [arXiv:2212.04356].
+Per the assignment the conv frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings (B, 1500, d_model); a learned frame projector
+stands in for the two conv layers.  Decoder/encoder depths are both 4.
+RoPE replaces Whisper's learned absolute positions (TPU-idiomatic;
+documented deviation, see DESIGN.md).
+"""
+from ..models import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    num_layers=4,
+    encoder_layers=4,
+    encoder_seq=1500,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp_variant="gelu",
+    tie_embeddings=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="encdec",
+    num_layers=2,
+    encoder_layers=2,
+    encoder_seq=16,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    mlp_variant="gelu",
+    dtype="float32",
+    remat=False,
+    full_size=False,
+)

@@ -1,0 +1,40 @@
+"""xlstm-125m [ssm]: sLSTM + mLSTM blocks (attention-free).
+
+12L d_model=768 4H d_ff=0 vocab=50304 [arXiv:2405.04517].  Blocks follow
+an xLSTM[7:1]-style mix: every 4th block is sLSTM (scalar memory with
+recurrent gating), the rest are mLSTM (matrix memory, exponential gating,
+pf=2 up-projection).  O(1)-state decode makes this the canonical
+long_500k architecture.
+"""
+from ..models import ModelConfig, SsmConfig
+
+FULL = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    ssm=SsmConfig(state_size=16, variant="mlstm", slstm_every=4,
+                  proj_factor=2.0),
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke",
+    family="ssm",
+    num_layers=4,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=0,
+    vocab_size=512,
+    ssm=SsmConfig(state_size=4, variant="mlstm", slstm_every=4,
+                  proj_factor=2.0),
+    dtype="float32",
+    remat=False,
+    full_size=False,
+)

@@ -1,0 +1,41 @@
+"""NEURON-Fabric core: low-bit gradient aggregation with admission control.
+
+The paper's contribution as a composable JAX module:
+
+  * :mod:`modes`        — aggregation modes + payload accounting (Table 2)
+  * :mod:`lowbit`       — G-Binary / G-Ternary / FP32 collectives (Section 2/3)
+  * :mod:`buckets`      — param groups, admission plans (Section 7.3)
+  * :mod:`aggregate`    — tree-level aggregation under a plan
+  * :mod:`admission`    — Predictor / Commander / Supervisor (Section 3/8)
+  * :mod:`diagnostics`  — cosine-alignment layer diagnostics (Table 5)
+  * :mod:`traffic`      — payload ratios + wire-byte/time models (Table 6, Fig 7)
+  * :mod:`exposure`     — datapath timing-exposure model (Section 5, Fig 3)
+"""
+from .modes import AggregationMode, Schedule, bits_per_element, traffic_ratio
+from .lowbit import (LeafPolicy, aggregate_leaf, fp32_allreduce,
+                     lowbit_packed_a2a, lowbit_vote_psum, majority_sign_sgd,
+                     sign_of_mean)
+from .buckets import (AdmissionPlan, GroupPolicy, GroupRules, assign_groups,
+                      group_sizes, path_name, resolve_policies)
+from .aggregate import aggregate_gradients, init_ef_states, make_policy_tree
+from .admission import (Commander, ControlPlane, CusumGuard, Predictor,
+                        Supervisor)
+from .diagnostics import (cosines_to_host, group_cosines_from_mean,
+                          group_cosines_from_workers)
+from .traffic import (IciModel, modeled_comm_time, payload_bytes,
+                      plan_traffic_ratio, wire_bytes_per_device)
+from .exposure import ExposureModel, TpuDatapathModel, envelope_sweep
+
+__all__ = [
+    "AggregationMode", "Schedule", "bits_per_element", "traffic_ratio",
+    "LeafPolicy", "aggregate_leaf", "fp32_allreduce", "lowbit_packed_a2a",
+    "lowbit_vote_psum", "majority_sign_sgd", "sign_of_mean",
+    "AdmissionPlan", "GroupPolicy", "GroupRules", "assign_groups",
+    "group_sizes", "path_name", "resolve_policies",
+    "aggregate_gradients", "init_ef_states", "make_policy_tree",
+    "Commander", "ControlPlane", "CusumGuard", "Predictor", "Supervisor",
+    "cosines_to_host", "group_cosines_from_mean", "group_cosines_from_workers",
+    "IciModel", "modeled_comm_time", "payload_bytes", "plan_traffic_ratio",
+    "wire_bytes_per_device",
+    "ExposureModel", "TpuDatapathModel", "envelope_sweep",
+]

@@ -1,0 +1,230 @@
+"""Admission control plane: Predictor / Commander / Supervisor.
+
+Paper Section 3 ("Control interface") organizes policy into three roles,
+which we keep verbatim — only the signal sources change from gem5/NS-3
+telemetry to training-runtime telemetry:
+
+  * **Predictor** — estimates collective pressure from forecasts: gradient
+    volume, per-bucket bytes, All-Reduce windows on the ICI model.  It never
+    observes gradients, weights, or loss.
+  * **Commander** — proposes a mode per layer group from diagnostics (the
+    deterministic ladder of Section 8: pick the lowest-traffic mode whose
+    cosine-alignment diagnostic passes, keep sensitive groups on FP32).
+  * **Supervisor** — training-health guard: a one-sided CUSUM on the loss
+    trend (Page, 1954) triggers recovery to FP32, enforces a cooldown, and
+    allows re-admission afterwards.
+
+The controller itself (the compiled train step) only ever receives mode
+metadata — an :class:`AdmissionPlan` — mirroring the paper's "the control
+plane writes only mode metadata; it does not inspect gradient payloads".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from .buckets import AdmissionPlan, GroupPolicy
+from .modes import AggregationMode, Schedule
+from .traffic import IciModel, plan_traffic_ratio, wire_bytes_per_device
+
+
+# ---------------------------------------------------------------------------
+# Predictor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Predictor:
+    """Communication-pressure forecasts (paper: trace-derived; here: model-derived).
+
+    Stored forecasts mirror the paper's list: forward/backward duration,
+    All-Reduce timing, gradient volume, shard bytes per device, peak
+    bandwidth demand.
+    """
+    num_workers: int
+    ici: IciModel = dataclasses.field(default_factory=IciModel)
+
+    def forecast(self, group_sizes: Mapping[str, int],
+                 plan: AdmissionPlan) -> dict:
+        grad_volume = sum(group_sizes.values()) * 4  # FP32 bytes produced
+        per_group = {}
+        total_time = 0.0
+        total_bytes = 0.0
+        for g, n in group_sizes.items():
+            pol = plan.policy_for(g)
+            b = wire_bytes_per_device(n, pol.mode, pol.resolved_schedule(),
+                                      self.num_workers)
+            t = self.ici.collective_time(b, self.num_workers)
+            per_group[g] = {"wire_bytes": b, "time_s": t}
+            total_time += t
+            total_bytes += b
+        return {
+            "gradient_volume_bytes": grad_volume,
+            "allreduce_time_s": total_time,
+            "wire_bytes_per_device": total_bytes,
+            "traffic_ratio": plan_traffic_ratio(group_sizes, plan),
+            "per_group": per_group,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Commander (deterministic admission ladder)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Commander:
+    """Maps per-group cosine diagnostics to the lowest-traffic passing mode.
+
+    Ladder (paper Section 8): G-Binary if its alignment passes, else
+    G-Ternary, else FP32.  Groups listed in ``always_fp32`` (norms by
+    default — scale-critical, tiny traffic) are never admitted.
+    """
+    tau_binary: float = 0.35
+    tau_ternary: float = 0.30
+    always_fp32: tuple = ("norms",)
+    schedule: Schedule | None = None
+    error_feedback: bool = False
+
+    def propose(self, cosines: Mapping[str, Mapping[str, float]]) -> AdmissionPlan:
+        """cosines: group -> {'gbinary': cos, 'gternary': cos}."""
+        policies = {}
+        for g, c in cosines.items():
+            if g in self.always_fp32:
+                policies[g] = GroupPolicy(AggregationMode.FP32)
+            elif c.get("gbinary", 0.0) >= self.tau_binary:
+                policies[g] = GroupPolicy(AggregationMode.G_BINARY,
+                                          self.schedule, self.error_feedback)
+            elif c.get("gternary", 0.0) >= self.tau_ternary:
+                policies[g] = GroupPolicy(AggregationMode.G_TERNARY,
+                                          self.schedule, self.error_feedback)
+            else:
+                policies[g] = GroupPolicy(AggregationMode.FP32)
+        return AdmissionPlan.from_dict(
+            policies, default=GroupPolicy(AggregationMode.FP32))
+
+
+# ---------------------------------------------------------------------------
+# Supervisor (CUSUM training-health guard)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CusumGuard:
+    """One-sided CUSUM on the loss trend (Page 1954).
+
+    s_t = max(0, s_{t-1} + (loss_t - mu_t - kappa)); trigger when s_t > h.
+    mu_t is an EWMA of the loss maintained while healthy, so the statistic
+    accumulates only *sustained* loss growth, not single-step noise.
+    """
+    kappa: float = 0.01
+    h: float = 0.25
+    ewma: float = 0.05
+    mu: float | None = None
+    s: float = 0.0
+
+    def update(self, loss: float) -> bool:
+        loss = float(loss)
+        if not math.isfinite(loss):
+            return True
+        if self.mu is None:
+            self.mu = loss
+            return False
+        self.s = max(0.0, self.s + (loss - self.mu - self.kappa))
+        triggered = self.s > self.h
+        if not triggered:
+            self.mu = (1 - self.ewma) * self.mu + self.ewma * loss
+        return triggered
+
+    def reset(self) -> None:
+        self.mu, self.s = None, 0.0
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """Keeps or recovers to FP32 when training-health telemetry is unsafe."""
+    guard: CusumGuard = dataclasses.field(default_factory=CusumGuard)
+    cooldown_steps: int = 50
+    _cooldown_left: int = 0
+
+    def observe(self, loss: float) -> bool:
+        """Returns True when a recovery to FP32 must happen now."""
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            self.guard.update(loss)  # keep mu tracking during cooldown
+            return False
+        if self.guard.update(loss):
+            self._cooldown_left = self.cooldown_steps
+            self.guard.reset()
+            return True
+        return False
+
+    @property
+    def in_cooldown(self) -> bool:
+        return self._cooldown_left > 0
+
+
+# ---------------------------------------------------------------------------
+# Control plane (mode-latch owner)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ControlEvent:
+    step: int
+    kind: str            # warmup_end | admitted | recovery | readmitted
+    plan_signature: str
+
+
+class ControlPlane:
+    """Warm-up on FP32 -> calibrate -> admit -> guarded recovery -> re-admit.
+
+    Drives the mode latch (the current AdmissionPlan); the training runtime
+    re-jits (cached) when the plan signature changes.
+    """
+
+    def __init__(self, commander: Commander | None = None,
+                 supervisor: Supervisor | None = None,
+                 predictor: Predictor | None = None,
+                 warmup_steps: int = 20):
+        self.commander = commander or Commander()
+        self.supervisor = supervisor or Supervisor()
+        self.predictor = predictor
+        self.warmup_steps = warmup_steps
+        self.plan = AdmissionPlan.fp32_all()
+        self._admitted_plan: AdmissionPlan | None = None
+        self.events: list[ControlEvent] = []
+        self._step = 0
+
+    def _emit(self, kind: str) -> None:
+        self.events.append(ControlEvent(self._step, kind, self.plan.signature()))
+
+    def step(self, loss: float,
+             cosines: Mapping[str, Mapping[str, float]] | None = None
+             ) -> AdmissionPlan:
+        """Advance one step of policy; returns the plan for the *next* step."""
+        self._step += 1
+        recovering = self.supervisor.observe(loss)
+
+        if recovering and self.plan.signature() != AdmissionPlan.fp32_all().signature():
+            self.plan = AdmissionPlan.fp32_all()
+            self._emit("recovery")
+            return self.plan
+
+        if self._step < self.warmup_steps:
+            return self.plan
+
+        if self._step == self.warmup_steps and cosines:
+            self.plan = self.commander.propose(cosines)
+            self._admitted_plan = self.plan
+            self._emit("admitted")
+            return self.plan
+
+        # re-admission after cooldown completes
+        if (self._admitted_plan is not None
+                and not self.supervisor.in_cooldown
+                and self.plan.signature() != self._admitted_plan.signature()):
+            if cosines:  # recalibrate before re-admitting
+                self.plan = self.commander.propose(cosines)
+                self._admitted_plan = self.plan
+            else:
+                self.plan = self._admitted_plan
+            self._emit("readmitted")
+        return self.plan

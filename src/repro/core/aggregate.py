@@ -1,0 +1,91 @@
+"""Tree-level gradient aggregation under an admission plan.
+
+This is the seam the training runtime calls: a gradient pytree goes in,
+and each leaf is aggregated under its resolved :class:`LeafPolicy`
+(FP32 / G-Binary / G-Ternary x schedule), exactly as the paper's
+controller applies the latched mode per admitted bucket.
+
+Error-feedback residual state (beyond paper, optional) is carried as a
+pytree matching the params: EF-enabled leaves hold a ``(1, *shape)`` local
+residual (globally ``(W, *shape)`` sharded over the DP axes); disabled
+leaves hold a scalar sentinel so the tree structure stays static across
+plans (one jit cache entry per plan signature, not per step).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .buckets import AdmissionPlan, GroupRules, resolve_policies
+from .lowbit import LeafPolicy, aggregate_leaf
+
+Axes = Sequence[str] | str
+
+_is_policy = lambda x: isinstance(x, LeafPolicy)
+
+
+def init_ef_states(params: Any, policies: Any, dtype=jnp.float32) -> Any:
+    """Residual tree: zeros like (1, *shape) where EF is on, scalar 0 else."""
+    def make(p, pol):
+        if pol.error_feedback:
+            return jnp.zeros((1,) + tuple(p.shape), dtype)
+        return jnp.zeros((), dtype)
+    return jax.tree.map(make, params, policies, is_leaf=None)
+
+
+def ef_specs(pspecs: Any, policies: Any, dp_axes) -> Any:
+    """PartitionSpecs for the EF tree (leading dim sharded over DP)."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(ps, pol):
+        if not pol.error_feedback:
+            return P()
+        inner = tuple(ps) if ps is not None else ()
+        return P(tuple(dp_axes) if not isinstance(dp_axes, str) else dp_axes,
+                 *inner)
+    return jax.tree.map(spec, pspecs, policies,
+                        is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple)) or isinstance(x, P))
+
+
+def aggregate_gradients(grads: Any, policies: Any, dp_axes: Axes,
+                        num_workers: int, ef_states: Any | None = None,
+                        interpret: bool | None = None):
+    """Aggregate a gradient tree leaf-by-leaf under resolved policies.
+
+    Runs inside a shard_map whose manual axes are ``dp_axes``.  Returns
+    ``(aggregates, new_ef_states)``; ``new_ef_states`` mirrors the input
+    sentinel structure.
+    """
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    p_leaves = treedef.flatten_up_to(policies)
+    if ef_states is None:
+        e_leaves = [None] * len(g_leaves)
+    else:
+        e_leaves = treedef.flatten_up_to(ef_states)
+
+    agg, new_ef = [], []
+    for g, pol, e in zip(g_leaves, p_leaves, e_leaves):
+        use_ef = pol.error_feedback and e is not None and e.ndim > 0
+        ef_in = e[0] if use_ef else None
+        u, ef_out = aggregate_leaf(g, pol, dp_axes, num_workers,
+                                   ef=ef_in, interpret=interpret)
+        agg.append(u)
+        if e is None:
+            new_ef.append(None)
+        elif use_ef:
+            new_ef.append(ef_out[None])
+        else:
+            new_ef.append(e)
+    aggregates = jax.tree_util.tree_unflatten(treedef, agg)
+    if ef_states is None:
+        return aggregates, None
+    return aggregates, jax.tree_util.tree_unflatten(treedef, new_ef)
+
+
+def make_policy_tree(params: Any, plan: AdmissionPlan,
+                     pspecs: Any | None = None,
+                     rules: GroupRules | None = None) -> Any:
+    """Convenience re-export: params + plan (+ specs) -> LeafPolicy tree."""
+    return resolve_policies(params, plan, pspecs=pspecs, rules=rules)

@@ -1,0 +1,174 @@
+"""Gradient bucket manager: parameter groups -> admitted aggregation policies.
+
+The paper's controller operates on *buckets* (Section 5.2 replays 32 MiB
+gradient buckets) and its admission decisions are *layer-group* granular
+(Section 7.3: backbone vs classifier head).  This module owns that mapping:
+
+  parameter tree --(GroupRules)--> named groups --(AdmissionPlan)--> modes
+                 --(resolve_policies)--> per-leaf LeafPolicy pytree
+
+Groups also drive the traffic accounting and the cosine-alignment
+diagnostics, so the three views (admission, traffic, diagnostics) always
+agree on what "the head" or "the backbone" is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .lowbit import LeafPolicy
+from .modes import AggregationMode, DEFAULT_SCHEDULE, Schedule
+
+
+def path_name(key_path) -> str:
+    """jax tree key path -> '/'-joined name, e.g. 'layers/3/attn/wq'."""
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupRules:
+    """Ordered (regex, group) rules; first match wins, default 'backbone'.
+
+    The default rules encode the paper's sensitivity findings plus the
+    standard production conventions: the classifier / LM head and anything
+    scale-like (norms, biases) stay out of the low-bit backbone group, and
+    MoE routers are treated as head-like (their gradients are tiny but
+    decision-critical — see DESIGN.md §Arch-applicability).
+    """
+    rules: tuple = (
+        (r"(^|/)(head|lm_head|classifier|logits)(/|$)", "head"),
+        (r"(^|/)(router|gate_weights?)(/|$)", "head"),
+        (r"(norm|bias|scale|ln_|layernorm)", "norms"),
+        (r"(embed|wte|wpe|patch_proj|frontend)", "embed"),
+    )
+    default: str = "backbone"
+
+    def group_of(self, name: str) -> str:
+        for pattern, group in self.rules:
+            if re.search(pattern, name):
+                return group
+        return self.default
+
+
+def assign_groups(params: Any, rules: GroupRules | None = None) -> Any:
+    """Params pytree -> pytree of group-name strings (same structure)."""
+    rules = rules or GroupRules()
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    groups = [rules.group_of(path_name(kp)) for kp, _ in leaves]
+    return jax.tree_util.tree_unflatten(treedef, groups)
+
+
+def group_sizes(params: Any, rules: GroupRules | None = None) -> dict[str, int]:
+    """Element counts per group (drives traffic accounting)."""
+    rules = rules or GroupRules()
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    out: dict[str, int] = {}
+    for kp, leaf in leaves:
+        g = rules.group_of(path_name(kp))
+        out[g] = out.get(g, 0) + int(leaf.size)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPolicy:
+    mode: AggregationMode = AggregationMode.FP32
+    schedule: Schedule | None = None          # None -> mode default
+    error_feedback: bool = False
+
+    def resolved_schedule(self) -> Schedule:
+        return self.schedule or DEFAULT_SCHEDULE[self.mode]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPlan:
+    """Controller-visible mode latch: group name -> GroupPolicy.
+
+    Immutable and hashable: the training runtime compiles one train_step per
+    plan signature and caches it (the XLA analogue of writing the paper's
+    mode latch — plans change at phase granularity, not per step).
+    """
+    policies: tuple = ()                      # tuple[(group, GroupPolicy)]
+    default: GroupPolicy = GroupPolicy()
+
+    @staticmethod
+    def from_dict(d: Mapping[str, GroupPolicy],
+                  default: GroupPolicy | None = None) -> "AdmissionPlan":
+        return AdmissionPlan(policies=tuple(sorted(d.items())),
+                             default=default or GroupPolicy())
+
+    def policy_for(self, group: str) -> GroupPolicy:
+        for g, pol in self.policies:
+            if g == group:
+                return pol
+        return self.default
+
+    def signature(self) -> str:
+        items = [f"{g}:{p.mode.value}:{p.resolved_schedule().value}"
+                 f":{int(p.error_feedback)}" for g, p in self.policies]
+        d = self.default
+        items.append(f"*:{d.mode.value}:{d.resolved_schedule().value}"
+                     f":{int(d.error_feedback)}")
+        return "|".join(items)
+
+    # ---- canonical plans from the paper -------------------------------
+    @staticmethod
+    def fp32_all() -> "AdmissionPlan":
+        return AdmissionPlan(default=GroupPolicy(AggregationMode.FP32))
+
+    @staticmethod
+    def lowbit_all(mode: AggregationMode = AggregationMode.G_BINARY,
+                   schedule: Schedule | None = None,
+                   error_feedback: bool = False) -> "AdmissionPlan":
+        """'Full-path' low-bit: the configuration CIFAR-100 rejects."""
+        return AdmissionPlan(default=GroupPolicy(mode, schedule, error_feedback))
+
+    @staticmethod
+    def lowbit_backbone(mode: AggregationMode = AggregationMode.G_BINARY,
+                        schedule: Schedule | None = None,
+                        error_feedback: bool = False) -> "AdmissionPlan":
+        """The paper's recovered operating point: low-bit backbone, FP32 head
+        (and FP32 for norms/embeddings/routers)."""
+        return AdmissionPlan.from_dict(
+            {"backbone": GroupPolicy(mode, schedule, error_feedback)},
+            default=GroupPolicy(AggregationMode.FP32))
+
+
+def resolve_policies(params: Any, plan: AdmissionPlan,
+                     pspecs: Any | None = None,
+                     rules: GroupRules | None = None) -> Any:
+    """Params (+ optional PartitionSpec tree) -> LeafPolicy pytree.
+
+    ``pspecs`` supplies each leaf's tensor-parallel PartitionSpec so the
+    packed_a2a schedule can localize TP-sharded leaves via an inner
+    shard_map.
+    """
+    rules = rules or GroupRules()
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    if pspecs is None:
+        spec_leaves = [None] * len(leaves)
+    else:
+        spec_leaves = jax.tree_util.tree_flatten(
+            pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)[0]
+    assert len(spec_leaves) == len(leaves), (
+        f"pspec tree mismatch: {len(spec_leaves)} specs vs {len(leaves)} leaves")
+    policies = []
+    for (kp, _), spec in zip(leaves, spec_leaves):
+        gp = plan.policy_for(rules.group_of(path_name(kp)))
+        policies.append(LeafPolicy(
+            mode=gp.mode, schedule=gp.resolved_schedule(), model_spec=spec,
+            error_feedback=gp.error_feedback))
+    return jax.tree_util.tree_unflatten(treedef, policies)

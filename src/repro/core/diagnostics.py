@@ -1,0 +1,99 @@
+"""Layer-wise low-bit/FP32 cosine-alignment diagnostics (paper Table 5).
+
+During FP32 calibration steps, both aggregates are available almost for
+free: the FP32 mean gradient (being used for the actual update) and the
+low-bit direction it *would* have produced.  The cosine between them,
+accumulated per layer group, is the admission signal: values near 1 mean
+the low-bit signal preserves the update direction, values near 0 mean it is
+nearly orthogonal (the paper measures 0.17 for the CIFAR-100 classifier
+head vs 0.72 for the backbone at epoch 20).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .buckets import GroupRules, assign_groups
+from .lowbit import _flat_index_gate
+
+
+def _cos(u: jax.Array, v: jax.Array, eps: float = 1e-12) -> jax.Array:
+    num = jnp.sum(u * v)
+    den = jnp.sqrt(jnp.sum(u * u)) * jnp.sqrt(jnp.sum(v * v)) + eps
+    return num / den
+
+
+def group_cosines_from_mean(grads_mean: Any, groups: Any,
+                            gate_phase: int = 0) -> dict:
+    """Per-group cosine between FP32 mean aggregate and its low-bit image.
+
+    ``grads_mean`` is the already-aggregated FP32 mean gradient tree (what
+    the calibration step computes anyway); the G-Binary image of the *mean*
+    is ``sign(mean)``, which equals the majority direction when workers
+    agree and is the controller-visible proxy during FP32 phases.  Jittable;
+    returns {group: {'gbinary': cos, 'gternary': cos}} of scalars.
+    """
+    leaves, _ = jax.tree_util.tree_flatten(grads_mean)
+    group_leaves, _ = jax.tree_util.tree_flatten(groups)
+    acc: dict[str, dict[str, list]] = {}
+    for leaf, group in zip(leaves, group_leaves):
+        g = leaf.astype(jnp.float32).reshape(-1)
+        ubin = jnp.sign(g)
+        uter = ubin * _flat_index_gate(g.shape, gate_phase)
+        d = acc.setdefault(group, {"num_b": [], "num_t": [],
+                                   "gg": [], "bb": [], "tt": []})
+        d["num_b"].append(jnp.sum(ubin * g))
+        d["num_t"].append(jnp.sum(uter * g))
+        d["gg"].append(jnp.sum(g * g))
+        d["bb"].append(jnp.sum(ubin * ubin))
+        d["tt"].append(jnp.sum(uter * uter))
+    out = {}
+    for group, d in acc.items():
+        gg = jnp.sqrt(sum(d["gg"]))
+        out[group] = {
+            "gbinary": sum(d["num_b"]) / (gg * jnp.sqrt(sum(d["bb"])) + 1e-12),
+            "gternary": sum(d["num_t"]) / (gg * jnp.sqrt(sum(d["tt"])) + 1e-12),
+        }
+    return out
+
+
+def group_cosines_from_workers(worker_grads: Any, groups: Any,
+                               gate_phase: int = 0) -> dict:
+    """Exact Table-5 diagnostic from stacked per-worker gradients.
+
+    ``worker_grads`` leaves have a leading worker dim (W, ...).  Computes
+    the true majority-vote aggregate (not the sign-of-mean proxy) against
+    the FP32 mean.  Used by the convergence benchmarks, which split
+    minibatches into virtual workers exactly as the paper does.
+    """
+    leaves, _ = jax.tree_util.tree_flatten(worker_grads)
+    group_leaves, _ = jax.tree_util.tree_flatten(groups)
+    acc: dict[str, dict[str, list]] = {}
+    for leaf, group in zip(leaves, group_leaves):
+        w = leaf.shape[0]
+        g = jnp.mean(leaf.astype(jnp.float32), axis=0).reshape(-1)
+        votes = jnp.sum((leaf > 0).astype(jnp.int32), axis=0).reshape(-1)
+        ubin = jnp.sign(2 * votes - w).astype(jnp.float32)
+        uter = ubin * _flat_index_gate(g.shape, gate_phase)
+        d = acc.setdefault(group, {"num_b": [], "num_t": [],
+                                   "gg": [], "bb": [], "tt": []})
+        d["num_b"].append(jnp.sum(ubin * g))
+        d["num_t"].append(jnp.sum(uter * g))
+        d["gg"].append(jnp.sum(g * g))
+        d["bb"].append(jnp.sum(ubin * ubin))
+        d["tt"].append(jnp.sum(uter * uter))
+    out = {}
+    for group, d in acc.items():
+        gg = jnp.sqrt(sum(d["gg"]))
+        out[group] = {
+            "gbinary": sum(d["num_b"]) / (gg * jnp.sqrt(sum(d["bb"])) + 1e-12),
+            "gternary": sum(d["num_t"]) / (gg * jnp.sqrt(sum(d["tt"])) + 1e-12),
+        }
+    return out
+
+
+def cosines_to_host(cosines: Mapping[str, Mapping[str, jax.Array]]) -> dict:
+    """Device scalars -> plain floats for the Commander."""
+    return {g: {k: float(v) for k, v in d.items()} for g, d in cosines.items()}

@@ -1,0 +1,208 @@
+"""Virtual-worker convergence experiments (paper Sections 7 and 8).
+
+The paper's protocol: split each minibatch into W=8 virtual workers, apply
+the selected aggregation rule to the per-worker gradients, and feed the
+aggregate to an unmodified optimizer.  This module provides that harness on
+synthetic cluster-classification tasks whose difficulty knob reproduces the
+paper's regimes: the easy task (CIFAR-10 analogue) tolerates full-path
+low-bit aggregation, the fine-grained hard task (CIFAR-100 analogue)
+rejects it, and layer-aware admission (low-bit backbone + FP32 head)
+recovers most of the gap — the paper's central boundary result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import ClassificationTask, make_cluster_task
+from .buckets import AdmissionPlan, GroupRules
+from .diagnostics import group_cosines_from_workers
+from .modes import AggregationMode
+from .traffic import plan_traffic_ratio
+
+
+# ---------------------------------------------------------------------------
+# small MLP classifier (backbone + head, mirroring the paper's split)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dim: int, hidden: int, classes: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = lambda k, a, b: jax.random.normal(k, (a, b)) * (1.0 / np.sqrt(a))
+    return {
+        "backbone": {"w1": s(k1, dim, hidden), "b1": jnp.zeros(hidden),
+                     "w2": s(k2, hidden, hidden), "b2": jnp.zeros(hidden)},
+        "head": {"w": s(k3, hidden, classes), "b": jnp.zeros(classes)},
+    }
+
+
+def mlp_logits(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ p["backbone"]["w1"] + p["backbone"]["b1"])
+    h = jax.nn.relu(h @ p["backbone"]["w2"] + p["backbone"]["b2"])
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def _ce(p, x, y):
+    lg = mlp_logits(p, x)
+    return jnp.mean(jax.scipy.special.logsumexp(lg, -1)
+                    - jnp.take_along_axis(lg, y[:, None], 1)[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# aggregation rules over stacked worker grads (host-side, W small)
+# ---------------------------------------------------------------------------
+
+def agg_fp32(g):
+    return jnp.mean(g, axis=0)
+
+
+def agg_gbinary(g):
+    w = g.shape[0]
+    return jnp.sign(2 * jnp.sum((g > 0), axis=0).astype(jnp.float32) - w)
+
+
+def agg_gternary(g):
+    u = agg_gbinary(g)
+    n = u.size
+    gate = ((jnp.arange(n) % 3) != 2).astype(jnp.float32).reshape(u.shape)
+    return u * gate
+
+
+def agg_majority_sign(g):
+    """MajoritySignSGD: communication-comparable software baseline."""
+    return agg_gbinary(g)
+
+
+def agg_sign_of_mean(g):
+    """SignOfMean: sign after the FP32 mean (optimizer reference)."""
+    return jnp.sign(jnp.mean(g, axis=0))
+
+
+RULES: dict[str, Callable] = {
+    "fp32": agg_fp32,
+    "gbinary": agg_gbinary,
+    "gternary": agg_gternary,
+    "majority_sign_sgd": agg_majority_sign,
+    "sign_of_mean": agg_sign_of_mean,
+}
+
+#: paper-tuned learning rates: FP32-scale for mean updates, small for sign
+LR = {"fp32": 0.08, "gbinary": 5e-4, "gternary": 5e-4,
+      "majority_sign_sgd": 5e-4, "sign_of_mean": 5e-4}
+
+
+@dataclasses.dataclass
+class RunResult:
+    policy: str
+    final_acc: float
+    traffic_ratio: float
+    losses: list
+    cosines: Optional[dict] = None
+
+
+def run_training(task: ClassificationTask, *, policy: str = "fp32",
+                 head_policy: Optional[str] = None, steps: int = 400,
+                 batch: int = 256, workers: int = 8, hidden: int = 256,
+                 seed: int = 0, lr: Optional[float] = None,
+                 momentum: float = 0.9, diagnose_at: Optional[int] = None,
+                 degrade: Optional[tuple] = None, warmup_fp32: int = 50,
+                 plan_callback: Optional[Callable] = None) -> RunResult:
+    """One training run under a (backbone, head) aggregation policy.
+
+    ``policy`` applies to the backbone; ``head_policy`` (default = policy)
+    to the classifier head — 'fp32' head + low-bit backbone is the paper's
+    layer-aware operating point.  Every run begins with ``warmup_fp32``
+    FP32 steps (paper Section 3: "Training begins on the FP32 bypass path")
+    before the selected policy is admitted.  ``plan_callback(step, loss)``
+    may return a (backbone, head) pair to change the policy online
+    (control-plane pilots).  ``degrade=(t0, t1)`` injects a gradient-
+    corruption window.
+    """
+    head_policy = head_policy or policy
+    params = init_mlp(jax.random.PRNGKey(seed), task.dim, hidden,
+                      task.num_classes)
+    vel = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def worker_grads(p, xs, ys):
+        return jax.vmap(lambda x, y: jax.grad(_ce)(p, x, y))(xs, ys)
+
+    losses, cosines = [], None
+    cur = (policy, head_policy)
+    data = task.batches(batch, seed_offset=seed * 1000)
+    rng_eval = np.random.RandomState(seed + 777)
+    xe, ye = task.sample(rng_eval, 2048)
+
+    lr_b = lr if lr is not None else LR[policy]
+    lr_h = lr if lr is not None else LR[head_policy]
+
+    traffic_acc = 0.0
+    for step in range(steps):
+        x, y = next(data)
+        xs = x.reshape(workers, batch // workers, -1)
+        ys = y.reshape(workers, batch // workers)
+        g = worker_grads(params, jnp.asarray(xs), jnp.asarray(ys))
+        if degrade and degrade[0] <= step < degrade[1]:
+            g = jax.tree.map(
+                lambda a: a + 5.0 * jax.random.normal(
+                    jax.random.PRNGKey(step), a.shape), g)
+
+        loss = float(_ce(params, jnp.asarray(x), jnp.asarray(y)))
+        losses.append(loss)
+
+        if plan_callback is not None:
+            nxt = plan_callback(step, loss)
+            if nxt is not None:
+                cur = nxt
+        active = ("fp32", "fp32") if step < warmup_fp32 else cur
+        bb_rule, hd_rule = RULES[active[0]], RULES[active[1]]
+
+        if diagnose_at is not None and step == diagnose_at:
+            groups = {"backbone": jax.tree.map(lambda _: "backbone",
+                                               params["backbone"]),
+                      "head": jax.tree.map(lambda _: "head", params["head"])}
+            cosines = {k: {m: float(v) for m, v in d.items()}
+                       for k, d in group_cosines_from_workers(
+                           g, groups).items()}
+
+        agg = {"backbone": jax.tree.map(bb_rule, g["backbone"]),
+               "head": jax.tree.map(hd_rule, g["head"])}
+        del bb_rule, hd_rule
+        bits = {"fp32": 32.0, "gbinary": 1.0, "gternary": np.log2(3.0),
+                "majority_sign_sgd": 1.0, "sign_of_mean": 32.0}
+        nb = sum(x.size for x in jax.tree.leaves(params["backbone"]))
+        nh = sum(x.size for x in jax.tree.leaves(params["head"]))
+        traffic_acc += (nb * bits[active[0]] + nh * bits[active[1]]) \
+            / (32.0 * (nb + nh))
+
+        def upd(p, v, a, lr_):
+            v = momentum * v + a
+            return p - lr_ * v, v
+        lr_b_now = LR["fp32"] if active[0] == "fp32" and lr is None else lr_b
+        lr_h_now = LR["fp32"] if active[1] == "fp32" and lr is None else lr_h
+        for grp, lr_ in (("backbone", lr_b_now), ("head", lr_h_now)):
+            new = jax.tree.map(lambda p, v, a: upd(p, v, a, lr_),
+                               params[grp], vel[grp], agg[grp])
+            params[grp] = jax.tree.map(lambda t: t[0], new,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+            vel[grp] = jax.tree.map(lambda t: t[1], new,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+
+    acc = float(jnp.mean(jnp.argmax(
+        mlp_logits(params, jnp.asarray(xe)), -1) == jnp.asarray(ye)))
+    return RunResult(policy=f"{cur[0]}+{cur[1]}head", final_acc=acc,
+                     traffic_ratio=traffic_acc / steps, losses=losses,
+                     cosines=cosines)
+
+
+def easy_task(seed: int = 0) -> ClassificationTask:
+    """CIFAR-10 analogue: 10 well-separated classes."""
+    return make_cluster_task(10, dim=64, hard=False, seed=seed)
+
+
+def hard_task(seed: int = 0) -> ClassificationTask:
+    """CIFAR-100 analogue: 100 fine-grained hierarchical classes."""
+    return make_cluster_task(100, dim=64, hard=True, seed=seed)

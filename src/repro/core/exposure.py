@@ -1,0 +1,128 @@
+"""Datapath timing-exposure model (paper Section 5, TPU-adapted).
+
+The paper's central timing question: is the low-bit aggregation datapath
+*exposed* in the communication path, or hidden behind the memory/link
+service interval?
+
+    T_exposed = max(0, T_agg - T_overlap)                     (Section 3)
+
+On TPU the "CXL bandwidth gate" becomes the ICI service time of the
+gradient collective, and the "five-cycle 512-bit datapath" becomes the VPU
+time of the pack/PopCount/majority kernels.  The same conclusion structure
+is preserved: under bandwidth pressure (large buckets, thin links) the
+datapath hides entirely; it is exposed only when the collective is cheap
+relative to compute — and even then it is bounded by the kernels' VPU
+throughput, reported here per byte.
+
+This module is analytic (the container has no TPU); the kernel *work*
+terms come from the kernels' op counts, and the benchmarks additionally
+measure interpret-mode wall time for the functional path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuDatapathModel:
+    """VPU-side cost model for the controller kernels.
+
+    The VPU executes one (8, 128) int32 lanes op per cycle.  Per packed
+    word (32 sign bits) the datapath costs roughly:
+      pack:      ~3 vector ops / 32 values  (cmp, shift, add-reduce amortized)
+      popcount:  ~3 ops per worker word
+      majority:  ~6 ops (margin, two compares, two shifts, gate)
+      unpack:    ~4 ops
+    """
+    clock_hz: float = 940e6            # v5e core clock
+    vpu_lanes: int = 8 * 128
+    ops_per_value_pack: float = 3 / 32
+    ops_per_value_popcount_per_worker: float = 3 / 32
+    ops_per_value_majority: float = 6 / 32
+    ops_per_value_unpack: float = 4 / 32
+
+    def t_agg(self, n_elements: int, num_workers: int) -> float:
+        """Seconds of VPU time for the full aggregation datapath."""
+        ops_per_value = (self.ops_per_value_pack
+                         + self.ops_per_value_popcount_per_worker * num_workers
+                         + self.ops_per_value_majority
+                         + self.ops_per_value_unpack)
+        total_ops = n_elements * ops_per_value
+        return total_ops / (self.vpu_lanes * self.clock_hz)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExposureModel:
+    """T_exposed = max(0, T_agg - overlap_fraction * T_service)."""
+    datapath: TpuDatapathModel = dataclasses.field(default_factory=TpuDatapathModel)
+    link_bw: float = 50e9              # bytes/s per ICI link
+    hbm_bw: float = 819e9              # bytes/s
+    overlap_fraction: float = 1.0      # how much of service time can hide compute
+
+    def t_service(self, wire_bytes_per_device: float) -> float:
+        return wire_bytes_per_device / self.link_bw
+
+    def exposed(self, n_elements: int, num_workers: int,
+                wire_bytes_per_device: float) -> dict:
+        t_agg = self.datapath.t_agg(n_elements, num_workers)
+        t_srv = self.t_service(wire_bytes_per_device)
+        t_exp = max(0.0, t_agg - self.overlap_fraction * t_srv)
+        base = t_srv if t_srv > 0 else t_agg
+        return {
+            "t_agg_s": t_agg,
+            "t_service_s": t_srv,
+            "t_exposed_s": t_exp,
+            "exposed_pct": 100.0 * t_exp / base if base else 0.0,
+            "hidden": t_exp == 0.0,
+        }
+
+
+def envelope_sweep(n_elements: int = 8 << 20, num_workers: int = 32,
+                   wire_bytes_per_device: float | None = None):
+    """Paper Fig 3 operating-envelope sweep, TPU-adapted.
+
+    Panel (a): link bandwidth x datapath depth multiplier.
+    Panel (b): hop latency (analogue of fixed CXL memory-access latency).
+    Panel (c): admitted fraction (analogue of LLC-filtered controller load).
+    Panel (d): telemetry (mode-latch) staleness in steps.
+    Returns {panel: list[dict]} rows for the benchmark harness.
+    """
+    if wire_bytes_per_device is None:
+        wire_bytes_per_device = 3 * n_elements / 8   # packed_a2a schedule
+    rows: dict[str, list] = {"a": [], "b": [], "c": [], "d": []}
+
+    for bw in (12.5e9, 25e9, 50e9, 100e9, 200e9):
+        for depth_mult in (1.0, 2.0, 4.0):
+            dp = TpuDatapathModel(
+                ops_per_value_pack=3 / 32 * depth_mult,
+                ops_per_value_popcount_per_worker=3 / 32 * depth_mult,
+                ops_per_value_majority=6 / 32 * depth_mult,
+                ops_per_value_unpack=4 / 32 * depth_mult)
+            m = ExposureModel(datapath=dp, link_bw=bw)
+            r = m.exposed(n_elements, num_workers, wire_bytes_per_device)
+            rows["a"].append({"link_gbps": bw / 1e9, "depth_mult": depth_mult, **r})
+
+    for hop_us in (0.5, 1.0, 2.0, 5.0):
+        m = ExposureModel()
+        r = m.exposed(n_elements, num_workers, wire_bytes_per_device)
+        r["t_service_s"] += 2 * (num_workers - 1) * hop_us * 1e-6
+        r["t_exposed_s"] = max(0.0, r["t_agg_s"] - r["t_service_s"])
+        r["exposed_pct"] = 100 * r["t_exposed_s"] / r["t_service_s"]
+        rows["b"].append({"hop_us": hop_us, **r})
+
+    for admitted_frac in (0.25, 0.5, 0.75, 1.0):
+        m = ExposureModel()
+        n_adm = int(n_elements * admitted_frac)
+        r = m.exposed(n_adm, num_workers, wire_bytes_per_device * admitted_frac
+                      + (1 - admitted_frac) * 8 * n_elements)
+        rows["c"].append({"admitted_frac": admitted_frac, **r})
+
+    for stale_steps in (0, 1, 10, 100):
+        # a stale mode latch only delays the traffic change; cost is one
+        # FP32-priced step per stale step, amortized over an epoch-scale run
+        step_cost = 8 * n_elements / 50e9
+        amortized_pct = 100.0 * stale_steps * step_cost / (1000 * step_cost)
+        rows["d"].append({"stale_steps": stale_steps,
+                          "amortized_step_cost_pct": amortized_pct})
+    return rows

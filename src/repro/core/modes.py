@@ -1,0 +1,74 @@
+"""Aggregation modes and payload-bit accounting (paper Table 2).
+
+Modes name what the "controller" returns for an admitted gradient bucket:
+
+  * IDENTITY   — original bytes (functional read-back checks only).
+  * FP32       — full-precision mean aggregate (warm-up / calibration /
+                 recovery path).
+  * G_BINARY   — majority sign aggregate, u = sgn(2c - W).
+  * G_TERNARY  — ternary sign/zero aggregate, u = m * sgn(2c - W) with the
+                 fixed 2-of-3 zero gate.
+
+Payload accounting follows the paper's convention: ratios count the bits of
+the communicated gradient representation per element, normalized to FP32
+(32 bits).  G-Ternary is counted at log2(3) bits/element, which reproduces
+the paper's 0.0494 full-path ratio (Table 6).
+"""
+from __future__ import annotations
+
+import enum
+import math
+
+
+class AggregationMode(str, enum.Enum):
+    IDENTITY = "identity"
+    FP32 = "fp32"
+    G_BINARY = "gbinary"
+    G_TERNARY = "gternary"
+
+    @property
+    def is_lowbit(self) -> bool:
+        return self in (AggregationMode.G_BINARY, AggregationMode.G_TERNARY)
+
+
+#: Communicated payload bits per gradient element, per mode.
+BITS_PER_ELEMENT = {
+    AggregationMode.IDENTITY: 32.0,
+    AggregationMode.FP32: 32.0,
+    AggregationMode.G_BINARY: 1.0,
+    AggregationMode.G_TERNARY: math.log2(3.0),
+}
+
+
+def bits_per_element(mode: AggregationMode) -> float:
+    return BITS_PER_ELEMENT[AggregationMode(mode)]
+
+
+def traffic_ratio(mode: AggregationMode) -> float:
+    """Payload ratio vs the same-runner FP32 baseline (paper Section 4)."""
+    return bits_per_element(mode) / 32.0
+
+
+class Schedule(str, enum.Enum):
+    """Concrete collective schedule implementing a mode on the mesh.
+
+    The *mode* fixes the returned aggregate's semantics; the *schedule* fixes
+    the bytes that actually cross ICI links (reported separately in the
+    roofline, mirroring the paper's payload-vs-service-path split).
+    """
+    #: FP32: XLA psum (ring reduce-scatter + all-gather under the hood).
+    PSUM = "psum"
+    #: low-bit, paper-faithful dense votes: int8 sign votes -> psum -> majority.
+    VOTE_PSUM = "vote_psum"
+    #: low-bit, controller schedule: pack -> all_to_all -> PopCount kernel ->
+    #: majority -> all-gather packed result (the CXL write/aggregate/read
+    #: response path mapped onto ICI collectives).
+    PACKED_A2A = "packed_a2a"
+
+
+DEFAULT_SCHEDULE = {
+    AggregationMode.IDENTITY: Schedule.PSUM,
+    AggregationMode.FP32: Schedule.PSUM,
+    AggregationMode.G_BINARY: Schedule.VOTE_PSUM,
+    AggregationMode.G_TERNARY: Schedule.VOTE_PSUM,
+}

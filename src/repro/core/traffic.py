@@ -1,0 +1,105 @@
+"""Gradient-traffic accounting and communication-time models.
+
+Two distinct views, kept separate exactly as in the paper:
+
+  * **Payload accounting** (paper Section 4 / Table 6): bits of the
+    communicated gradient *representation* per element, normalized to the
+    same-runner FP32 payload.  This is what "traffic vs FP32 = 0.0357"
+    means; it is independent of the collective algorithm.
+
+  * **Wire-byte / time models** (paper Fig 7 and our roofline collective
+    term): bytes that actually cross links per device under a concrete
+    schedule, and the resulting modeled communication time on the TPU ICI
+    constants.  These are not wall-clock training speedups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .buckets import AdmissionPlan
+from .modes import AggregationMode, Schedule, bits_per_element
+
+
+# ---------------------------------------------------------------------------
+# payload accounting (paper's ratios)
+# ---------------------------------------------------------------------------
+
+def payload_bytes(n_elements: int, mode: AggregationMode) -> float:
+    """Communicated payload bytes for one aggregation of n elements."""
+    return n_elements * bits_per_element(mode) / 8.0
+
+
+def plan_traffic_ratio(sizes: Mapping[str, int], plan: AdmissionPlan) -> float:
+    """Traffic vs FP32 for an admission plan over the given group sizes.
+
+    Reproduces the paper's Table 6 accounting: e.g. for ResNet-18/CIFAR-100
+    (backbone ~99.54% of params) a G-Binary backbone + FP32 head plan yields
+    ~0.0357, and full-path G-Binary yields 0.0313 (= 1/32).
+    """
+    total = sum(sizes.values())
+    if total == 0:
+        return 1.0
+    lowbit = sum(n * bits_per_element(plan.policy_for(g).mode)
+                 for g, n in sizes.items())
+    return lowbit / (32.0 * total)
+
+
+# ---------------------------------------------------------------------------
+# wire-byte models per schedule (per-device bytes crossing links)
+# ---------------------------------------------------------------------------
+
+def wire_bytes_per_device(n_elements: int, mode: AggregationMode,
+                          schedule: Schedule, num_workers: int,
+                          dtype_bytes: int = 4) -> float:
+    """Ring-model bytes per device for one aggregation of n elements.
+
+    fp32 psum        : 2 (W-1)/W * 4N          (reduce-scatter + all-gather)
+    vote_psum (int8) : 2 (W-1)/W * 1N
+    packed_a2a       : (W-1)/W * (N/8)          all_to_all of packed signs
+                       + (W-1)/W * (N/4)        all-gather of sign+mask words
+    """
+    w = num_workers
+    if w <= 1:
+        return 0.0
+    f = (w - 1) / w
+    if mode in (AggregationMode.FP32, AggregationMode.IDENTITY):
+        return 2.0 * f * dtype_bytes * n_elements
+    if schedule == Schedule.VOTE_PSUM:
+        return 2.0 * f * 1.0 * n_elements
+    if schedule == Schedule.PACKED_A2A:
+        return f * (n_elements / 8.0) + f * (n_elements / 4.0)
+    raise ValueError(f"unknown schedule {schedule}")
+
+
+# ---------------------------------------------------------------------------
+# modeled communication time (paper Fig 7, TPU-adapted)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IciModel:
+    """TPU v5e-like interconnect constants (see EXPERIMENTS.md §Roofline)."""
+    link_gbps: float = 50e9          # bytes/s per ICI link direction
+    links_per_chip: float = 1.0      # effective links usable by the collective
+    hop_latency_s: float = 1e-6      # per-step latency of a ring stage
+
+    def collective_time(self, per_device_bytes: float,
+                        num_workers: int) -> float:
+        bw = self.link_gbps * self.links_per_chip
+        steps = max(2 * (num_workers - 1), 1)
+        return per_device_bytes / bw + steps * self.hop_latency_s
+
+
+def modeled_comm_time(n_elements: int, mode: AggregationMode,
+                      schedule: Schedule, num_workers: int,
+                      ici: IciModel | None = None) -> float:
+    """One-aggregation communication time under the ring/ICI model."""
+    ici = ici or IciModel()
+    b = wire_bytes_per_device(n_elements, mode, schedule, num_workers)
+    return ici.collective_time(b, num_workers)
+
+
+#: Payload sizes used by the paper's Fig 7 positioning experiment.
+GPT2_XL_PARAMS = 1_557_611_200       # GPT-2 XL ~1.56B parameters
+BERT_LARGE_PARAMS = 340_000_000
+GPT3_PARAMS = 175_000_000_000

@@ -1,0 +1,6 @@
+"""Deterministic synthetic data pipelines (LM streams + classification tasks)."""
+from .pipeline import (ClassificationTask, MarkovLM, Prefetcher,
+                       SyntheticLMStream, make_cluster_task)
+
+__all__ = ["ClassificationTask", "MarkovLM", "Prefetcher",
+           "SyntheticLMStream", "make_cluster_task"]

@@ -1,0 +1,17 @@
+"""NEURON-Fabric controller-datapath kernels (Pallas TPU + pure-jnp oracles).
+
+The paper's 512-bit five-cycle CXL aggregation datapath maps here to three
+VREG-aligned Pallas stages (sign packing, worker PopCount, majority/ternary
+decode) plus a beyond-paper fused packed-update kernel.  ``ref`` holds the
+bit-exact pure-jnp oracles used by the functional tests (paper Section 6).
+"""
+from . import ref
+from .ops import (LANE, PACK, apply_sign_update, from_plane, interpret_default,
+                  majority_decode, pack_signs, padded_len, popcount_stack,
+                  ternary_gate_words, to_plane, unpack_ternary)
+
+__all__ = [
+    "ref", "LANE", "PACK", "apply_sign_update", "from_plane",
+    "interpret_default", "majority_decode", "pack_signs", "padded_len",
+    "popcount_stack", "ternary_gate_words", "to_plane", "unpack_ternary",
+]

@@ -1,0 +1,115 @@
+"""Pallas TPU kernels: the NEURON-Fabric "controller datapath".
+
+Two stages mirror the paper's five-cycle 512-bit aggregation pipeline
+(Section 3, "Datapath"):
+
+  * ``popcount_stack``  — sign unpacking/alignment + per-element PopCount
+    across W workers' packed payloads (the XNOR/PopCount tree).
+  * ``majority_decode`` — vote margin a = 2c - W, majority / ternary gating,
+    and re-packing of the returned aggregate as a ternary packed pair
+    (sign_words, mask_words).
+
+The zero gate is an explicit packed operand so the same kernel serves
+G-Binary (gate = all ones; zeros only on vote ties) and G-Ternary
+(gate = the fixed 2-of-3 pattern from Section 2, or any policy mask).
+
+TPU mapping notes: counts are int8 (W <= 127 workers per group, far above
+the DP degree of the production mesh); all tiles are (8k, 128) VREG-aligned;
+the word <-> value fan-out of 32 is expressed as a sublane reduction /
+broadcast so no Mosaic-unfriendly reshape crosses the lane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LANE, PACK
+from .sign_pack import _pick_word_block
+
+
+# ---------------------------------------------------------------------------
+# popcount across workers
+# ---------------------------------------------------------------------------
+
+def _popcount_stack_kernel(packed_ref, out_ref, *, num_workers: int,
+                           words_per_block: int):
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (PACK, LANE), 0)
+    for r in range(words_per_block):
+        acc = jnp.zeros((PACK, LANE), jnp.int32)
+        for w in range(num_workers):
+            word = packed_ref[w, r:r + 1, :]                     # (1, LANE)
+            bits = (jnp.broadcast_to(word, (PACK, LANE)) >> shifts) & jnp.uint32(1)
+            acc = acc + bits.astype(jnp.int32)
+        out_ref[r * PACK:(r + 1) * PACK, :] = acc.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_words"))
+def popcount_stack(packed: jax.Array, *, interpret: bool = False,
+                   block_words: int | None = None) -> jax.Array:
+    """(W, R, LANE) uint32 packed sign words -> (32 R, LANE) int8 vote counts."""
+    w, r, lane = packed.shape
+    assert lane == LANE
+    wb = block_words or _pick_word_block(r, max_words=8)
+    grid = (r // wb,)
+    return pl.pallas_call(
+        functools.partial(_popcount_stack_kernel, num_workers=w,
+                          words_per_block=wb),
+        out_shape=jax.ShapeDtypeStruct((r * PACK, LANE), jnp.int8),
+        grid=grid,
+        in_specs=[pl.BlockSpec((w, wb, LANE), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((wb * PACK, LANE), lambda i: (i, 0)),
+        interpret=interpret,
+    )(packed)
+
+
+# ---------------------------------------------------------------------------
+# majority / ternary decode of vote counts
+# ---------------------------------------------------------------------------
+
+def _majority_decode_kernel(counts_ref, gate_ref, sign_ref, mask_ref, *,
+                            num_workers: int, words_per_block: int):
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (PACK, LANE), 0)
+    for r in range(words_per_block):
+        c = counts_ref[r * PACK:(r + 1) * PACK, :].astype(jnp.int32)  # (32, LANE)
+        a = 2 * c - num_workers                                        # vote margin
+        sign_bits = (a > 0).astype(jnp.uint32)
+        nz_bits = (a != 0).astype(jnp.uint32)
+        sign_word = jnp.sum(sign_bits << shifts, axis=0, keepdims=True)
+        mask_word = jnp.sum(nz_bits << shifts, axis=0, keepdims=True)
+        gate = gate_ref[r:r + 1, :]
+        sign_ref[r:r + 1, :] = sign_word.astype(jnp.uint32)
+        mask_ref[r:r + 1, :] = (mask_word & gate).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_workers", "interpret", "block_words"))
+def majority_decode(counts: jax.Array, gate_words: jax.Array, *,
+                    num_workers: int, interpret: bool = False,
+                    block_words: int | None = None):
+    """Vote counts (M, LANE) + packed gate (M//32, LANE) -> ternary packed pair.
+
+    Returns (sign_words, mask_words), each (M // 32, LANE) uint32.
+    mask bit = (2c != W) AND gate bit; sign bit = (2c > W).
+    """
+    m, lane = counts.shape
+    assert lane == LANE and m % PACK == 0
+    num_words = m // PACK
+    assert gate_words.shape == (num_words, LANE)
+    wb = block_words or _pick_word_block(num_words, max_words=8)
+    grid = (num_words // wb,)
+    out_shape = (jax.ShapeDtypeStruct((num_words, LANE), jnp.uint32),
+                 jax.ShapeDtypeStruct((num_words, LANE), jnp.uint32))
+    return pl.pallas_call(
+        functools.partial(_majority_decode_kernel, num_workers=num_workers,
+                          words_per_block=wb),
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[pl.BlockSpec((wb * PACK, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((wb, LANE), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((wb, LANE), lambda i: (i, 0)),
+                   pl.BlockSpec((wb, LANE), lambda i: (i, 0))),
+        interpret=interpret,
+    )(counts, gate_words)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: pack gradient signs into uint32 word planes.
+
+This is the write-side payload materialization of the paper (Section 3,
+"Write-side payload materialization"): the runtime derives a packed sign
+payload from ordinary FP32/BF16 gradients *before* the communication step.
+
+Layout contract (shared with ref.py): value plane (M, 128) -> word plane
+(M // 32, 128) uint32, bit b of word [r, l] = sign of value [32 r + b, l].
+
+TPU mapping: each block holds ``32 * RB`` value rows in VMEM; the kernel
+statically unrolls RB word rows, each formed by a sublane reduction of
+``bit << row_index`` over a (32, 128) VREG tile — the direct analogue of the
+paper's 512-bit sign-packing stage, eight VREGs at a time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LANE, PACK
+
+
+def _sign_pack_kernel(x_ref, out_ref, *, words_per_block: int):
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (PACK, LANE), 0)
+    for r in range(words_per_block):
+        rows = x_ref[r * PACK:(r + 1) * PACK, :]                # (32, LANE)
+        bits = (rows > 0).astype(jnp.uint32)
+        word = jnp.sum(bits << shifts, axis=0, keepdims=True)    # (1, LANE)
+        out_ref[r:r + 1, :] = word.astype(jnp.uint32)
+
+
+def _pick_word_block(num_words: int, max_words: int = 16) -> int:
+    for wb in range(min(max_words, num_words), 0, -1):
+        if num_words % wb == 0:
+            return wb
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_words"))
+def sign_pack(plane: jax.Array, *, interpret: bool = False,
+              block_words: int | None = None) -> jax.Array:
+    """Value plane (M, LANE) -> packed sign word plane (M // 32, LANE) uint32."""
+    m, lane = plane.shape
+    assert lane == LANE, f"lane dim must be {LANE}, got {lane}"
+    assert m % PACK == 0, f"rows {m} must be a multiple of {PACK}"
+    num_words = m // PACK
+    wb = block_words or _pick_word_block(num_words)
+    grid = (num_words // wb,)
+    return pl.pallas_call(
+        functools.partial(_sign_pack_kernel, words_per_block=wb),
+        out_shape=jax.ShapeDtypeStruct((num_words, LANE), jnp.uint32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((wb * PACK, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((wb, LANE), lambda i: (i, 0)),
+        interpret=interpret,
+    )(plane)

@@ -1,0 +1,182 @@
+"""Post-partitioning HLO analysis: collective inventory + roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs and HBM bytes but not collective
+traffic, so collective bytes are parsed from the compiled HLO text: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op's operand sizes and replica groups, folded through a ring cost model
+into per-device wire bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> tuple[int, Optional[list[list[int]]]]:
+    """Return (group_size, groups or None)."""
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        groups = [[int(x) for x in g.split(",") if x]
+                  for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+        return (len(groups[0]) if groups else 1), groups
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        src = [int(x) for x in m.group(3).split(",")]
+        try:
+            import numpy as np
+            ids = np.arange(int(np.prod(src))).reshape(src)
+            if m.group(4):
+                perm = [int(x) for x in m.group(4).split(",")]
+                ids = ids.transpose(perm)
+            groups = ids.reshape(ng, gs).tolist()
+        except Exception:
+            groups = None
+        return gs, groups
+    m = _PAIRS_RE.search(line)
+    if m:   # collective-permute
+        pairs = [tuple(int(x) for x in p.split(","))
+                 for p in re.findall(r"\{(\d+,\d+)\}", "{" + m.group(1) + "}")]
+        return 2, [list(p) for p in pairs] if pairs else None
+    return 1, None
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_total: int          # per-device payload size of the op's output
+    group_size: int
+    wire_bytes: float         # per-device bytes crossing links (ring model)
+    crosses_pod: bool
+    dtype: str = ""
+
+
+def _wire_bytes(kind: str, payload: int, g: int) -> float:
+    """Ring-model per-device wire bytes for one collective."""
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * f * payload
+    if kind == "all-gather":
+        return f * payload                 # payload = gathered output
+    if kind == "reduce-scatter":
+        return (g - 1) * payload           # payload = scattered output
+    if kind == "all-to-all":
+        return f * payload
+    if kind == "collective-permute":
+        return float(payload)
+    return 0.0
+
+
+def parse_collectives(hlo: str, pod_size: int = 0) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for line in hlo.splitlines():
+        m = _LINE_RE.search(line)
+        if m is None or "-done(" in line:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        payload = _shape_bytes(sig)
+        gsize, groups = _parse_groups(line)
+        crosses = False
+        if pod_size and groups:
+            for grp in groups:
+                pods = {d // pod_size for d in grp}
+                if len(pods) > 1:
+                    crosses = True
+                    break
+        dts = _SHAPE_RE.findall(sig)
+        dtype = dts[0][0] if dts else ""
+        ops.append(CollectiveOp(
+            kind=kind, bytes_total=payload, group_size=gsize,
+            wire_bytes=_wire_bytes(kind, payload, gsize),
+            crosses_pod=crosses, dtype=dtype))
+    return ops
+
+
+def summarize_collectives(ops: list[CollectiveOp]) -> dict:
+    by_kind: dict[str, dict] = {}
+    by_dtype: dict[str, float] = {}
+    by_group: dict[str, float] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "wire_bytes": 0.0,
+                                         "payload_bytes": 0})
+        d["count"] += 1
+        d["wire_bytes"] += op.wire_bytes
+        d["payload_bytes"] += op.bytes_total
+        by_dtype[op.dtype] = by_dtype.get(op.dtype, 0.0) + op.wire_bytes
+        key = f"g{op.group_size}"
+        by_group[key] = by_group.get(key, 0.0) + op.wire_bytes
+    total_wire = sum(o.wire_bytes for o in ops)
+    pod_wire = sum(o.wire_bytes for o in ops if o.crosses_pod)
+    top = sorted(ops, key=lambda o: -o.wire_bytes)[:8]
+    return {
+        "total_wire_bytes": total_wire,
+        "pod_crossing_wire_bytes": pod_wire,
+        "num_ops": len(ops),
+        "by_kind": by_kind,
+        "by_dtype": by_dtype,
+        "by_group_size": by_group,
+        "top_ops": [{"kind": o.kind, "dtype": o.dtype,
+                     "group": o.group_size, "wire_bytes": o.wire_bytes}
+                    for o in top],
+    }
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one direction)
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   wire_bytes_per_device: float) -> dict:
+    t_comp = flops_per_device / PEAK_FLOPS
+    t_mem = hbm_bytes_per_device / HBM_BW
+    t_coll = wire_bytes_per_device / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    total = t_comp + t_mem + t_coll
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "roofline_fraction": (t_comp / bound) if bound > 0 else 0.0,
+        "step_time_lower_bound_s": bound,
+    }

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state — the dry-run must set XLA_FLAGS
+before anything initializes the backend.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ('data', 'model') single-pod; ('pod', 'data', 'model') multi-pod.
+    The 'pod' axis is outer data-parallelism across the (thin) inter-pod
+    links — exactly the boundary where NEURON-Fabric's low-bit gradient
+    aggregation buys the most (DESIGN.md §4).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes_of(mesh) -> tuple:
+    """The data-parallel (gradient aggregation) axes of a mesh."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape_cell)`` returns the exact abstract inputs the
+dry-run lowers against, per architecture family and evaluation cell:
+
+  * train / prefill — token batches (+ patch features for the VLM stub,
+    + frame embeddings for the audio stub);
+  * decode — one new token, a KV/state cache sized to ``seq_len``, and the
+    position scalar.
+
+Weak-type-correct, shardable, and allocation-free by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, ShapeCell, init_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.family == "vlm":
+        p = cfg.vision_patches
+        text = s - p
+        return {"tokens": sds((b, text), jnp.int32),
+                "labels": sds((b, text), jnp.int32),
+                "patch_feats": sds((b, p, cfg.vision_feat_dim), jnp.bfloat16)}
+    if cfg.family == "encdec":
+        return {"tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32),
+                "frames": sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {"token": sds((b, 1), jnp.int32),
+            "cache": cache,
+            "position": sds((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, optimizer, plan, rules=None, dp_size: int = 1):
+    """Abstract TrainState via eval_shape (params + opt + EF sentinels)."""
+    from ..core import init_ef_states, resolve_policies
+    from ..models import init_params, param_pspecs
+    from ..runtime.train import TrainState
+
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: optimizer.init(params))
+    policies = resolve_policies(params, plan, pspecs=param_pspecs(cfg),
+                                rules=rules)
+    ef = jax.eval_shape(lambda: init_ef_states(params, policies))
+    ef = jax.tree.map(
+        lambda e: (sds((dp_size,) + e.shape[1:], e.dtype)
+                   if e.ndim > 0 else e), ef)
+    return TrainState(params=params, opt=opt, ef=ef,
+                      step=sds((), jnp.int32))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """All model inputs for one evaluation cell (the assignment's API)."""
+    if cell.kind in ("train", "prefill"):
+        return train_batch_specs(cfg, cell)
+    return decode_input_specs(cfg, cell)

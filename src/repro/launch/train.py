@@ -1,0 +1,108 @@
+"""Production training launcher.
+
+Single-host entry point (multi-host: same binary under your cluster
+scheduler with jax.distributed.initialize — the Trainer, checkpoint, and
+data layers are already host-indexed).  Examples:
+
+  # 8 simulated devices, qwen3 smoke config, G-Binary backbone:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_0p6b --smoke \\
+      --mesh 4,2 --steps 100 --plan gbin_backbone
+
+  # adaptive control plane (warm-up -> calibrate -> admit -> guarded):
+  ... --plan adaptive
+"""
+import argparse
+import logging
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--mesh", default="1,1",
+                    help="data,model (or pod,data,model) mesh shape")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--plan", default="gbin_backbone",
+                    choices=["fp32", "gbin_backbone", "gbin_packed",
+                             "gter_backbone", "lowbit_all", "adaptive"])
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=100)
+    ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--device-count", type=int, default=0,
+                    help="force host platform device count (CPU sim)")
+    args = ap.parse_args()
+
+    if args.device_count:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count="
+                                   f"{args.device_count}").strip()
+
+    import jax
+    from jax.sharding import AxisType
+
+    from ..configs import get_config
+    from ..core import (AdmissionPlan, AggregationMode, Commander,
+                        ControlPlane, Schedule, Supervisor)
+    from ..data import SyntheticLMStream
+    from ..optim import AdamW, SgdMomentum
+    from ..runtime import Trainer, TrainerConfig
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    axes = ("pod", "data", "model")[-len(shape):]
+    mesh = jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+    dp_axes = tuple(a for a in axes if a != "model")
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    data = SyntheticLMStream(vocab=cfg.vocab_size, seq_len=args.seq_len,
+                             batch=args.global_batch, seed=args.seed)
+
+    opt_cls = AdamW if args.optimizer == "adamw" else SgdMomentum
+    optimizer = opt_cls(peak_lr=args.lr, total_steps=args.steps)
+
+    ef = args.error_feedback
+    plans = {
+        "fp32": AdmissionPlan.fp32_all(),
+        "gbin_backbone": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_BINARY, error_feedback=ef),
+        "gbin_packed": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_BINARY, schedule=Schedule.PACKED_A2A,
+            error_feedback=ef),
+        "gter_backbone": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_TERNARY, error_feedback=ef),
+        "lowbit_all": AdmissionPlan.lowbit_all(
+            AggregationMode.G_BINARY, error_feedback=ef),
+    }
+    control = plan = None
+    if args.plan == "adaptive":
+        control = ControlPlane(commander=Commander(),
+                               supervisor=Supervisor(), warmup_steps=20)
+    else:
+        plan = plans[args.plan]
+
+    trainer = Trainer(
+        cfg, mesh, optimizer, data, plan=plan, control=control,
+        tcfg=TrainerConfig(dp_axes=dp_axes,
+                           checkpoint_interval=args.ckpt_interval),
+        ckpt_dir=args.ckpt_dir, seed=args.seed)
+    history = trainer.run(args.steps)
+    last = history[-1]
+    print(f"final: step={last['step']} loss={last['loss']:.4f} "
+          f"traffic={last['traffic_ratio']:.4f} "
+          f"restarts={trainer.restarts} "
+          f"stragglers={len(trainer.watchdog.events)}")
+
+
+if __name__ == "__main__":
+    main()

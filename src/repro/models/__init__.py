@@ -1,0 +1,13 @@
+"""Composable model definitions for the assigned architecture families."""
+from .config import (ModelConfig, MoEConfig, ShapeCell, SHAPES,
+                     SHAPES_BY_NAME, SsmConfig)
+from .transformer import (cache_pspecs, count_params, decode_step, forward,
+                          global_attention_flags, init_cache, init_params,
+                          loss_fn, param_pspecs)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "ShapeCell", "SHAPES", "SHAPES_BY_NAME",
+    "SsmConfig", "cache_pspecs", "count_params", "decode_step", "forward",
+    "global_attention_flags", "init_cache", "init_params", "loss_fn",
+    "param_pspecs",
+]

@@ -1,0 +1,293 @@
+"""State-space / recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba-style heads.
+
+These cover the two assigned non-attention architectures:
+
+  * ``xlstm-125m`` — alternating mLSTM (matrix memory, exponential gating)
+    and sLSTM (scalar memory, recurrent gating) blocks per arXiv:2405.04517.
+  * ``hymba-1.5b`` — Mamba-style selective-SSM heads running *in parallel*
+    with attention heads inside each layer (arXiv:2411.13676); the SSM part
+    lives here, the fusion lives in models/transformer.py.
+
+All recurrences use ``lax.scan`` over time with O(1)-in-sequence state, so
+the ``long_500k`` decode cell is a single cheap state update — exactly why
+these families stay in the long-context matrix (DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# two-level checkpointed scan (O(sqrt(T)) backward memory)
+# ---------------------------------------------------------------------------
+
+def chunked_scan(step, state0, xs, seq_len: int, chunk: int = 0):
+    """lax.scan over time with sqrt(T) gradient-checkpoint chunking.
+
+    A flat scan's backward pass saves every per-step carry (for mLSTM that
+    is the (B,H,hd,hd) matrix memory at all T steps — hundreds of GB at 4k
+    tokens).  Chunking saves only the chunk-boundary carries and recomputes
+    inside each checkpointed chunk: memory ~ (T/chunk + chunk) * state.
+    """
+    if chunk <= 0:
+        chunk = max(int(math.sqrt(seq_len)), 1)
+    if seq_len <= chunk or seq_len % chunk != 0:
+        return jax.lax.scan(step, state0, xs)
+
+    nc = seq_len // chunk
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((nc, chunk) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(state, xc):
+        return jax.lax.scan(step, state, xc)
+
+    state, ys = jax.lax.scan(outer, state0, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape((seq_len,) + y.shape[2:]), ys)
+    return state, ys
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    """xLSTM mLSTM block: up-projection by pf, H heads over the inner dim."""
+    d = cfg.d_model
+    pf = cfg.ssm.proj_factor
+    di = int(d * pf)
+    h = cfg.num_heads
+    hd = di // h
+    ks = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(d)
+    stdi = 1.0 / math.sqrt(di)
+    dt = _dt(cfg)
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, di)) * std).astype(dt),
+        "w_q": (jax.random.normal(ks[1], (di, di)) * stdi).astype(dt),
+        "w_k": (jax.random.normal(ks[2], (di, di)) * stdi).astype(dt),
+        "w_v": (jax.random.normal(ks[3], (di, di)) * stdi).astype(dt),
+        "w_ogate": (jax.random.normal(ks[4], (d, di)) * std).astype(dt),
+        "w_if": (jax.random.normal(ks[5], (di, 2 * h)) * stdi).astype(jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]).astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[6], (di, d)) * stdi).astype(dt),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    di = int(cfg.d_model * cfg.ssm.proj_factor)
+    h = cfg.num_heads
+    hd = di // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def _mlstm_cell(state: dict, qkvif, hd: int):
+    """One stabilized mLSTM step (arXiv:2405.04517 eqs. 19-27)."""
+    q, k, v, it, ft = qkvif          # (B,H,hd) x3, (B,H), (B,H)
+    c_prev, n_prev, m_prev = state["C"], state["n"], state["m"]
+    m_t = jnp.maximum(ft + m_prev, it)
+    i_p = jnp.exp(it - m_t)
+    f_p = jnp.exp(ft + m_prev - m_t)
+    c_t = (f_p[..., None, None] * c_prev
+           + i_p[..., None, None] * (v[..., :, None] * k[..., None, :]))
+    n_t = f_p[..., None] * n_prev + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_t * q, axis=-1)), 1.0)
+    h_t = jnp.einsum("bhvk,bhk->bhv", c_t, q) / denom[..., None]
+    return {"C": c_t, "n": n_t, "m": m_t}, h_t
+
+
+def _mlstm_preact(p: dict, x: jax.Array, cfg: ModelConfig):
+    b, s, d = x.shape
+    di = p["w_up"].shape[1]
+    h = cfg.num_heads
+    hd = di // h
+    xu = x @ p["w_up"]
+    q = (xu @ p["w_q"]).reshape(b, s, h, hd) / math.sqrt(hd)
+    k = (xu @ p["w_k"]).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = (xu @ p["w_v"]).reshape(b, s, h, hd)
+    gif = (xu.astype(jnp.float32) @ p["w_if"]) + p["if_bias"]
+    it, ft = gif[..., :h], gif[..., h:]
+    o = jax.nn.sigmoid(x @ p["w_ogate"])
+    return q, k, v, it, ft, o
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence mLSTM block (training / prefill)."""
+    b, s, d = x.shape
+    di = p["w_up"].shape[1]
+    h = cfg.num_heads
+    hd = di // h
+    q, k, v, it, ft, o = _mlstm_preact(p, x, cfg)
+
+    def step(state, inp):
+        return _mlstm_cell(state, inp, hd)
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          it.swapaxes(0, 1), ft.swapaxes(0, 1))
+    state0 = mlstm_init_state(cfg, b)
+    _, hs = chunked_scan(step, state0, xs, s)
+    hs = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)   # (B,S,di)
+    return (o * hs) @ p["w_down"]
+
+
+def mlstm_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    """One-token mLSTM step; x: (B,1,d)."""
+    b = x.shape[0]
+    di = p["w_up"].shape[1]
+    h = cfg.num_heads
+    hd = di // h
+    q, k, v, it, ft, o = _mlstm_preact(p, x, cfg)
+    inp = (q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+           v[:, 0].astype(jnp.float32), it[:, 0], ft[:, 0])
+    new_state, h_t = _mlstm_cell(state, inp, hd)
+    h_t = h_t.reshape(b, 1, di).astype(x.dtype)
+    return (o * h_t) @ p["w_down"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with recurrent gating) block
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    dt = _dt(cfg)
+    std = 1.0 / math.sqrt(d)
+    return {
+        # input weights for z, i, f, o stacked: (d, 4d)
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * std).astype(dt),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd)) / math.sqrt(hd)).astype(jnp.float32),
+        "bias": jnp.concatenate([jnp.zeros((3 * d,)), jnp.ones((d,))]).astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[2], (d, d)) * std).astype(dt),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p: dict, cfg: ModelConfig, state: dict, x_in: jax.Array):
+    """x_in: (B, 4d) preactivation from input; adds recurrent term."""
+    b = x_in.shape[0]
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    h_prev = state["h"].reshape(b, h, hd)
+    rec = jnp.einsum("bhk,hkf->bhf", h_prev, p["r"]).reshape(b, 4 * d)
+    pre = x_in + rec + p["bias"]
+    z, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_t)
+    m_t = jnp.maximum(f_t + state["m"], i_t)       # exponential-gate stabilizer
+    i_p = jnp.exp(i_t - m_t)
+    f_p = jnp.exp(f_t + state["m"] - m_t)
+    c_t = f_p * state["c"] + i_p * z
+    n_t = f_p * state["n"] + i_p
+    h_t = o * (c_t / jnp.maximum(n_t, 1e-6))
+    return {"c": c_t, "n": n_t, "h": h_t, "m": m_t}, h_t
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    x_in = (x @ p["w_in"]).astype(jnp.float32)     # (B,S,4d)
+
+    def step(state, xi):
+        return _slstm_cell(p, cfg, state, xi)
+
+    _, hs = chunked_scan(step, slstm_init_state(cfg, b),
+                         x_in.swapaxes(0, 1), s)
+    hs = hs.swapaxes(0, 1).astype(x.dtype)
+    return hs @ p["w_down"]
+
+
+def slstm_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    x_in = (x[:, 0] @ p["w_in"]).astype(jnp.float32)
+    new_state, h_t = _slstm_cell(p, cfg, state, x_in)
+    return (h_t[:, None].astype(x.dtype)) @ p["w_down"], new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective-SSM head (Hymba parallel heads)
+# ---------------------------------------------------------------------------
+
+def init_mamba_head(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    n = cfg.ssm.state_size
+    ks = jax.random.split(key, 5)
+    dt = _dt(cfg)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, d)) * std).astype(dt),
+        "w_dt": (jax.random.normal(ks[1], (d, d)) * std * 0.1).astype(jnp.float32),
+        "dt_bias": jnp.full((d,), -2.0, jnp.float32),    # softplus(-2) ~ 0.12
+        "w_bc": (jax.random.normal(ks[2], (d, 2 * n)) * std).astype(jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (d, 1))),
+        "skip_scale": jnp.ones((d,), jnp.float32),
+        "w_out": (jax.random.normal(ks[3], (d, d)) * std).astype(dt),
+    }
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> jax.Array:
+    return jnp.zeros((batch, cfg.d_model, cfg.ssm.state_size), jnp.float32)
+
+
+def _mamba_scan_inputs(p: dict, x: jax.Array, cfg: ModelConfig):
+    n = cfg.ssm.state_size
+    u = (x @ p["w_in"]).astype(jnp.float32)                       # (B,S,d)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["w_dt"] + p["dt_bias"])
+    bc = x.astype(jnp.float32) @ p["w_bc"]
+    b_in, c_out = bc[..., :n], bc[..., n:]
+    a = -jnp.exp(p["a_log"])                                       # (d, n)
+    da = jnp.exp(dt[..., None] * a)                                # (B,S,d,n)
+    db = dt[..., None] * b_in[..., None, :]                        # (B,S,d,n)
+    return u, da, db, c_out
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    u, da, db, c_out = _mamba_scan_inputs(p, x, cfg)
+
+    def step(h, inp):
+        u_t, da_t, db_t, c_t = inp
+        h = da_t * h + db_t * u_t[..., None]                       # (B,d,n)
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)                  # (B,d)
+        return h, y
+
+    xs = (u.swapaxes(0, 1), da.swapaxes(0, 1), db.swapaxes(0, 1),
+          c_out.swapaxes(0, 1))
+    _, ys = chunked_scan(step, mamba_init_state(cfg, b), xs, s)
+    ys = ys.swapaxes(0, 1)                                          # (B,S,d)
+    y = ys + p["skip_scale"] * u
+    return (y.astype(x.dtype)) @ p["w_out"]
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: jax.Array):
+    u, da, db, c_out = _mamba_scan_inputs(p, x, cfg)
+    h = da[:, 0] * state + db[:, 0] * u[:, 0, :, None]
+    y = jnp.sum(h * c_out[:, 0][:, None, :], axis=-1) + p["skip_scale"] * u[:, 0]
+    return (y[:, None].astype(x.dtype)) @ p["w_out"], h

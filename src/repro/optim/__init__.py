@@ -1,0 +1,6 @@
+"""Optimizers (AdamW, SGD-momentum) with ZeRO-1 state-sharding specs."""
+from .optimizers import (AdamW, OptState, Optimizer, SgdMomentum,
+                         lr_schedule, optimizer_state_pspecs)
+
+__all__ = ["AdamW", "OptState", "Optimizer", "SgdMomentum", "lr_schedule",
+           "optimizer_state_pspecs"]

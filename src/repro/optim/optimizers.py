@@ -1,0 +1,151 @@
+"""Optimizers for NEURON-Fabric training.
+
+The paper's contract: the aggregate returned by the controller (FP32 mean
+or low-bit {-1, 0, +1} direction) is handed to the *unmodified* optimizer —
+"NEURON-Fabric does not change model computation, model weights, or
+backpropagation".  So these are ordinary AdamW / SGD-momentum; the only
+NEURON-Fabric-aware piece is :func:`optimizer_state_pspecs`, which shards
+optimizer moments over the data-parallel axes (ZeRO-1) — a distributed-
+optimization feature orthogonal to the aggregation mode.
+
+Everything is pure: ``init`` builds state, ``apply`` maps
+(params, grads, state) -> (params, state).  Distribution happens outside
+via shardings (GSPMD materializes the gather/scatter implied by ZeRO-1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any                 # first moment / momentum
+    nu: Any                 # second moment (None-tree for SGD)
+
+
+def lr_schedule(step, *, peak_lr: float, warmup_steps: int = 100,
+                total_steps: int = 10000, min_ratio: float = 0.1):
+    """Linear warmup + cosine decay to ``min_ratio * peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0        # 0 = off; applies to FP32 aggregates only
+
+    def init(self, params: Any) -> OptState:
+        raise NotImplementedError
+
+    def apply(self, params: Any, grads: Any, state: OptState
+              ) -> tuple[Any, OptState]:
+        raise NotImplementedError
+
+    def _lr(self, step):
+        return lr_schedule(step, peak_lr=self.peak_lr,
+                           warmup_steps=self.warmup_steps,
+                           total_steps=self.total_steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW(Optimizer):
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, params: Any) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def apply(self, params, grads, state):
+        step = state.step + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdMomentum(Optimizer):
+    momentum: float = 0.9
+    nesterov: bool = False
+
+    def init(self, params: Any) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=None)
+
+    def apply(self, params, grads, state):
+        step = state.step + 1
+        lr = self._lr(step)
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            if self.weight_decay:
+                g = g + self.weight_decay * p.astype(jnp.float32)
+            m = self.momentum * m + g
+            d = g + self.momentum * m if self.nesterov else m
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m
+
+        flat = jax.tree.map(upd, params, grads, state.mu)
+        new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, mu=new_m, nu=None)
+
+
+def optimizer_state_pspecs(param_pspecs: Any, params_abstract: Any,
+                           dp_axes=("pod", "data"), dp_size: int = 1,
+                           zero1: bool = True) -> Any:
+    """ZeRO-1 PartitionSpecs for optimizer moments.
+
+    Each moment leaf additionally shards its *first un-sharded, divisible*
+    dimension over the DP axes.  Leaves too small (or with no divisible
+    dim) stay replicated — the memory win lives in the big matrices anyway.
+    """
+    dp = tuple(dp_axes)
+
+    def spec(ps, p):
+        if not zero1 or p.ndim == 0:
+            return ps if ps is not None else P()
+        entries = list(ps) if ps is not None else []
+        entries += [None] * (p.ndim - len(entries))
+        for i, (e, dim) in enumerate(zip(entries, p.shape)):
+            if e is None and dim % max(dp_size, 1) == 0 and dim >= dp_size:
+                entries[i] = dp
+                return P(*entries)
+        return P(*entries)
+
+    is_spec = lambda x: isinstance(x, P) or x is None
+    mu = jax.tree.map(spec, param_pspecs, params_abstract, is_leaf=is_spec)
+    return mu

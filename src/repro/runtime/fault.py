@@ -1,0 +1,82 @@
+"""Fault-tolerance utilities: failure injection, straggler watchdog.
+
+On a real multi-pod job, node failures surface as collective timeouts /
+process exits and restarts go through the checkpoint path.  The trainer
+here exercises exactly that path: :class:`FailureInjector` raises at
+configured steps, and the trainer's recovery logic restores the latest
+atomic checkpoint and replays the deterministic data stream — the same
+control flow a production launcher (GKE/Borg restart policy) would drive.
+
+Straggler mitigation in a synchronous SPMD world is a *scheduling* concern:
+the watchdog detects persistent slow steps (EWMA outliers) and reports
+them; the trainer's hook can then rebalance (skip-batch, reshard, or mark
+the host for replacement at the next checkpoint boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a node crash / collective abort."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise SimulatedFailure at the given steps (each fires once)."""
+    at_steps: Sequence[int] = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    ewma_s: float
+
+
+class StragglerWatchdog:
+    """EWMA-based step-time outlier detector with a mitigation hook."""
+
+    def __init__(self, threshold: float = 3.0, alpha: float = 0.1,
+                 warmup: int = 3,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.events: list[StragglerEvent] = []
+        self._seen = 0
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        self._seen += 1
+        if self.ewma is None:
+            self.ewma = duration_s
+            return False
+        is_straggler = (self._seen > self.warmup
+                        and duration_s > self.threshold * self.ewma)
+        if is_straggler:
+            ev = StragglerEvent(step, duration_s, self.ewma)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration_s
+        return is_straggler
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.duration = time.perf_counter() - self.t0

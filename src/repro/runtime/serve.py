@@ -1,0 +1,79 @@
+"""Serving runtime: batched prefill + decode steps on the production mesh.
+
+Serving has no gradient traffic, so NEURON-Fabric modes are a no-op here
+(the paper's identity/bypass path); the cells still exercise the full
+distribution stack: batch over DP, heads over TP, and — for the
+long-context batch=1 cell — the KV-cache *sequence* dim sharded over the
+DP axes (flash-decode style sequence parallelism, resolved by GSPMD into
+partial-softmax + combine collectives).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import (ModelConfig, cache_pspecs, decode_step, forward,
+                      init_cache, init_params, param_pspecs)
+from .shardings import named_shardings
+
+
+def serve_shardings(cfg: ModelConfig, mesh, *, batch: int, max_seq: int,
+                    dp_axes=("data",)) -> dict:
+    """Input/output shardings for one decode step.
+
+    If the global batch is divisible by the DP degree, batch is sharded
+    over DP and the cache over (batch x kv-heads).  Otherwise (the
+    long_500k batch=1 cell) the cache sequence dim is sharded over DP.
+    """
+    dp = tuple(dp_axes)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    shard_seq = batch % dp_size != 0
+    tok_spec = P() if shard_seq else P(dp, None)
+    cache_specs = cache_pspecs(cfg, shard_seq=shard_seq, dp_axes=dp)
+    cache_like = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    return {
+        "token": NamedSharding(mesh, tok_spec),
+        "cache": named_shardings(cache_specs, mesh, cache_like),
+        "shard_seq": shard_seq,
+    }
+
+
+def build_serve_step(cfg: ModelConfig, mesh, *, batch: int, max_seq: int,
+                     dp_axes=("data",), donate: bool = True):
+    """jitted (params, token, cache, position) -> (logits, cache)."""
+    sh = serve_shardings(cfg, mesh, batch=batch, max_seq=max_seq,
+                         dp_axes=dp_axes)
+    params_like = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = named_shardings(param_pspecs(cfg), mesh, params_like)
+
+    def step(params, token, cache, position):
+        return decode_step(params, cfg, token, cache, position)
+
+    sh["params"] = p_sh
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, sh["token"], sh["cache"], None),
+        out_shardings=(None, sh["cache"]),
+        donate_argnums=(2,) if donate else ())
+    return jitted, sh
+
+
+def build_prefill(cfg: ModelConfig, mesh, *, dp_axes=("data",)):
+    """jitted prefill: (params, batch) -> logits, batch sharded over DP."""
+    dp = tuple(dp_axes)
+    params_like = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = named_shardings(param_pspecs(cfg), mesh, params_like)
+    b_sh = NamedSharding(mesh, P(dp))
+
+    def run(params, batch):
+        return forward(params, cfg, batch)
+
+    return jax.jit(run, in_shardings=(p_sh, b_sh), out_shardings=None)

@@ -1,0 +1,59 @@
+"""Sharding utilities: divisibility-safe PartitionSpecs.
+
+``jit`` in/out shardings require every sharded dimension to divide evenly
+by the product of its mesh axes (unlike activation *constraints*, which
+GSPMD pads).  Architectures with odd head counts (hymba's 25 heads, xlstm's
+4) or small leaves would otherwise fail to lower, so every explicit spec
+tree is sanitized against the concrete shapes: non-divisible entries fall
+back to replication for that dimension (the memory cost lives in the big,
+always-divisible matrices anyway).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_is_spec = lambda x: isinstance(x, P) or x is None
+
+
+def _axis_size(mesh, entry) -> int:
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P | None, shape, mesh) -> P:
+    if spec is None:
+        return P()
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for entry, dim in zip(entries, shape):
+        if entry is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sanitize_pspecs(spec_tree: Any, like_tree: Any, mesh) -> Any:
+    """Spec pytree + shape pytree -> divisibility-safe spec pytree."""
+    flat_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    flat_spec = treedef.flatten_up_to(spec_tree)
+    fixed = [sanitize_spec(s, l.shape, mesh)
+             for s, l in zip(flat_spec, flat_like)]
+    return jax.tree_util.tree_unflatten(treedef, fixed)
+
+
+def named_shardings(spec_tree: Any, mesh, like_tree: Any | None = None) -> Any:
+    """Spec pytree -> NamedSharding pytree (sanitized if shapes given)."""
+    if like_tree is not None:
+        spec_tree = sanitize_pspecs(spec_tree, like_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=_is_spec)

@@ -1,0 +1,362 @@
+"""Distributed training runtime: the NEURON-Fabric train step and Trainer.
+
+The train step is the integration point of the whole system (DESIGN.md §4):
+
+  * gradients are computed inside a *partial-manual* ``jax.shard_map`` —
+    manual over the DP axes (``('pod','data')``), auto over ``'model'`` —
+    so per-worker gradients are visible to the aggregation layer exactly
+    like per-worker payloads are visible to the paper's controller;
+  * each bucket is aggregated under its admitted mode
+    (core.aggregate_gradients): FP32 buckets via psum, low-bit buckets via
+    int8 vote psum or the packed all_to_all controller schedule;
+  * the optimizer runs *outside* the shard_map in auto-SPMD land, so
+    ZeRO-1 optimizer-state sharding is pure GSPMD;
+  * one compiled step per AdmissionPlan signature, cached — the XLA
+    analogue of the paper's controller mode latch.
+
+The Trainer owns the host-side control loop: warm-up/calibration, the
+Predictor/Commander/Supervisor control plane, checkpointing, failure
+recovery, and the straggler watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import (AdmissionPlan, ControlPlane, GroupRules,
+                    aggregate_gradients, assign_groups, cosines_to_host,
+                    group_cosines_from_mean, group_sizes, init_ef_states,
+                    plan_traffic_ratio, resolve_policies)
+from ..checkpoint import CheckpointManager
+from ..models import ModelConfig, init_params, loss_fn as model_loss_fn, \
+    param_pspecs
+from ..optim import Optimizer, optimizer_state_pspecs
+from .fault import (FailureInjector, SimulatedFailure, StepTimer,
+                    StragglerWatchdog)
+from .shardings import sanitize_pspecs
+
+log = logging.getLogger("repro.train")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    ef: Any                    # error-feedback residuals (sentinel tree)
+    step: jax.Array
+
+
+def dp_num_workers(mesh, dp_axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+# ---------------------------------------------------------------------------
+# step builder
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh, optimizer: Optimizer,
+                     plan: AdmissionPlan, params_like: Any, *,
+                     dp_axes=("data",), rules: GroupRules | None = None,
+                     with_diagnostics: bool = False,
+                     loss: Callable | None = None,
+                     zero1: bool = True,
+                     grad_accum: int = 1,
+                     donate: bool = True):
+    """Compile one train step for a given admission plan.
+
+    ``params_like``: a concrete or abstract (ShapeDtypeStruct) params tree —
+    used only for structure/paths.  ``grad_accum`` splits the per-device
+    batch into that many sequentially-scanned microbatches (activation
+    memory / grad_accum, one aggregation per step — communication volume
+    unchanged, overlap-friendly).  Returns (jitted_step, state_shardings,
+    batch_shardings, aux).
+    """
+    rules = rules or GroupRules()
+    dp = tuple(dp_axes)
+    w = dp_num_workers(mesh, dp)
+    pspecs = sanitize_pspecs(param_pspecs(cfg), params_like, mesh)
+    policies = resolve_policies(params_like, plan, pspecs=pspecs, rules=rules)
+    groups = assign_groups(params_like, rules)
+    lf = loss or (lambda p, b: model_loss_fn(p, cfg, b))
+
+    pol_leaves, pol_def = jax.tree_util.tree_flatten(
+        policies, is_leaf=lambda x: hasattr(x, "mode"))
+    spec_leaves = pol_def.flatten_up_to(pspecs)
+    ef_spec_leaves = [
+        P(dp, *tuple(sp or P())) if pol.error_feedback else P()
+        for pol, sp in zip(pol_leaves, spec_leaves)]
+    ef_specs = jax.tree_util.tree_unflatten(pol_def, ef_spec_leaves)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P(dp), ef_specs),
+        out_specs=(P(), P(), ef_specs),
+        axis_names=frozenset(dp), check_vma=False)
+    def _grad_agg(params, batch, ef):
+        if grad_accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                lacc, gacc = carry
+                l, g = jax.value_and_grad(lf)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                return (lacc + l, gacc), None
+
+            (lval, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0), micro)
+            lval = lval / grad_accum
+            grads = jax.tree.map(lambda x: x / grad_accum, grads)
+        else:
+            lval, grads = jax.value_and_grad(lf)(params, batch)
+        agg, new_ef = aggregate_gradients(grads, policies, dp, w,
+                                          ef_states=ef)
+        lval = jax.lax.pmean(lval, dp)
+        return lval, agg, new_ef
+
+    def step_fn(state: TrainState, batch):
+        lval, agg, new_ef = _grad_agg(state.params, batch, state.ef)
+        metrics = {"loss": lval}
+        if with_diagnostics:
+            cos = group_cosines_from_mean(agg, groups)
+            for g, d in sorted(cos.items()):
+                metrics[f"cos/{g}/gbinary"] = d["gbinary"]
+                metrics[f"cos/{g}/gternary"] = d["gternary"]
+        gn = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                          for x in jax.tree.leaves(agg)))
+        metrics["agg_norm"] = gn
+        new_params, new_opt = optimizer.apply(state.params, agg, state.opt)
+        return (TrainState(params=new_params, opt=new_opt, ef=new_ef,
+                           step=state.step + 1), metrics)
+
+    # shardings for explicit jit I/O (also consumed by the dry-run)
+    param_sh = _named(mesh, pspecs)
+    opt_specs = optimizer_state_pspecs(pspecs, params_like, dp_axes=dp,
+                                       dp_size=w, zero1=zero1)
+    mu_sh = _named(mesh, opt_specs)
+    state_shardings = TrainState(
+        params=param_sh,
+        opt=_opt_shardings(optimizer, mu_sh, mesh),
+        ef=_named(mesh, ef_specs),
+        step=NamedSharding(mesh, P()))
+    batch_sharding = NamedSharding(mesh, P(dp))
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, batch_sharding),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,) if donate else ())
+    aux = {"policies": policies, "groups": groups, "num_workers": w,
+           "ef_specs": ef_specs, "pspecs": pspecs}
+    return jitted, state_shardings, batch_sharding, aux
+
+
+def _is_abstract(tree) -> bool:
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+
+def _opt_shardings(optimizer: Optimizer, mu_sh, mesh):
+    """OptState(step, mu, nu) sharding tree matching optimizer kind."""
+    from ..optim.optimizers import OptState
+    scalar = NamedSharding(mesh, P())
+    has_nu = type(optimizer).__name__ == "AdamW"
+    return OptState(step=scalar, mu=mu_sh, nu=mu_sh if has_nu else None)
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainerConfig:
+    dp_axes: tuple = ("data",)
+    warmup_steps: int = 20            # FP32 calibration window
+    checkpoint_interval: int = 100
+    checkpoint_keep: int = 3
+    log_interval: int = 10
+    max_restarts: int = 10
+    zero1: bool = True
+
+
+class Trainer:
+    """Host control loop with admission control and fault tolerance."""
+
+    def __init__(self, cfg: ModelConfig, mesh, optimizer: Optimizer,
+                 data: Iterator[dict], *,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 control: ControlPlane | None = None,
+                 plan: AdmissionPlan | None = None,
+                 rules: GroupRules | None = None,
+                 ckpt_dir: str | None = None,
+                 failure_injector: FailureInjector | None = None,
+                 loss: Callable | None = None,
+                 seed: int = 0):
+        self.cfg, self.mesh, self.optimizer = cfg, mesh, optimizer
+        self.tcfg = tcfg
+        self.rules = rules or GroupRules()
+        self.control = control
+        self.static_plan = plan
+        self.data = data
+        self.loss = loss
+        self.seed = seed
+        self.failure_injector = failure_injector
+        self.watchdog = StragglerWatchdog()
+        self.ckpt = (CheckpointManager(ckpt_dir,
+                                       interval=tcfg.checkpoint_interval,
+                                       keep=tcfg.checkpoint_keep)
+                     if ckpt_dir else None)
+        self._compiled: dict[str, Any] = {}
+        self.state: TrainState | None = None
+        self.history: list[dict] = []
+        self.restarts = 0
+        self.traffic_log: list[float] = []
+        self._sizes = None
+
+    # -- state ----------------------------------------------------------
+    def init_state(self) -> TrainState:
+        key = jax.random.PRNGKey(self.seed)
+        with jax.set_mesh(self.mesh):
+            params = init_params(key, self.cfg)
+        pspecs = param_pspecs(self.cfg)
+        params = jax.device_put(params, _named(self.mesh, pspecs))
+        opt = self.optimizer.init(params)
+        plan = self._current_plan()
+        policies = resolve_policies(params, plan, pspecs=pspecs,
+                                    rules=self.rules)
+        ef = init_ef_states(params, policies)
+        # EF leaves need the leading-DP dim
+        w = dp_num_workers(self.mesh, self.tcfg.dp_axes)
+        ef = jax.tree.map(
+            lambda e: (jnp.broadcast_to(e, (w,) + e.shape[1:])
+                       if e.ndim > 0 else e), ef)
+        self.state = TrainState(params=params, opt=opt, ef=ef,
+                                step=jnp.zeros((), jnp.int32))
+        self._sizes = group_sizes(params, self.rules)
+        return self.state
+
+    def _current_plan(self) -> AdmissionPlan:
+        if self.control is not None:
+            return self.control.plan
+        return self.static_plan or AdmissionPlan.fp32_all()
+
+    def _get_step(self, plan: AdmissionPlan, diagnostics: bool):
+        key = (plan.signature(), diagnostics)
+        if key not in self._compiled:
+            jitted, st_sh, b_sh, aux = build_train_step(
+                self.cfg, self.mesh, self.optimizer, plan,
+                self.state.params, dp_axes=self.tcfg.dp_axes,
+                rules=self.rules, with_diagnostics=diagnostics,
+                loss=self.loss, zero1=self.tcfg.zero1)
+            self._compiled[key] = (jitted, b_sh)
+        return self._compiled[key]
+
+    # -- loop -----------------------------------------------------------
+    def run(self, num_steps: int) -> list[dict]:
+        if self.state is None:
+            if self.ckpt is not None:
+                restored = None
+                try:
+                    self.init_state()
+                    restored = self.ckpt.restore(self.state)
+                except FileNotFoundError:
+                    restored = None
+                if restored is not None:
+                    step, tree, _ = restored
+                    self.state = tree
+                    log.info("restored checkpoint at step %d", step)
+            else:
+                self.init_state()
+
+        it = iter(self.data)
+        done = int(self.state.step)
+        while done < num_steps:
+            try:
+                done = self._run_until(num_steps, it)
+            except SimulatedFailure as e:
+                self.restarts += 1
+                if self.restarts > self.tcfg.max_restarts:
+                    raise
+                log.warning("%s -> restart %d (restore + replay)",
+                            e, self.restarts)
+                self._recover()
+                done = int(self.state.step)
+        if self.ckpt is not None:
+            self.ckpt.maybe_save(int(self.state.step), self.state, force=True)
+            self.ckpt.wait()
+        return self.history
+
+    def _recover(self):
+        """Node-failure recovery: restore last durable checkpoint."""
+        if self.ckpt is None:
+            raise RuntimeError("failure without checkpointing enabled")
+        restored = self.ckpt.restore(self.state)
+        if restored is None:
+            self.init_state()
+        else:
+            _, self.state, _ = restored
+
+    def _run_until(self, num_steps: int, it: Iterator[dict]) -> int:
+        dp = self.tcfg.dp_axes
+        while int(self.state.step) < num_steps:
+            step = int(self.state.step)
+            if self.failure_injector is not None:
+                self.failure_injector.check(step)
+
+            plan = self._current_plan()
+            calibrating = (self.control is not None
+                           and step < self.tcfg.warmup_steps)
+            jitted, b_sh = self._get_step(plan, calibrating)
+            if hasattr(self.data, "batch_at"):   # deterministic replay
+                batch = self.data.batch_at(step)
+            else:
+                batch = next(it)
+            batch = jax.tree.map(
+                lambda a: jax.device_put(jnp.asarray(a), b_sh), batch)
+
+            with StepTimer() as t:
+                self.state, metrics = jitted(self.state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+            self.watchdog.observe(step, t.duration)
+
+            metrics["step"] = step
+            metrics["plan"] = plan.signature()
+            metrics["traffic_ratio"] = plan_traffic_ratio(self._sizes, plan)
+            self.traffic_log.append(metrics["traffic_ratio"])
+            self.history.append(metrics)
+
+            if self.control is not None:
+                cos = None
+                if calibrating and step == self.tcfg.warmup_steps - 1:
+                    cos = {g: {"gbinary": metrics.get(f"cos/{g}/gbinary", 0.0),
+                               "gternary": metrics.get(f"cos/{g}/gternary", 0.0)}
+                           for g in self._sizes}
+                self.control.step(metrics["loss"], cosines=cos)
+
+            if self.ckpt is not None:
+                self.ckpt.maybe_save(step + 1, self.state,
+                                     extra={"plan": plan.signature()})
+            if step % self.tcfg.log_interval == 0:
+                log.info("step %d loss %.4f traffic %.4f plan=%s", step,
+                         metrics["loss"], metrics["traffic_ratio"],
+                         plan.signature()[:48])
+        return int(self.state.step)

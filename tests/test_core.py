@@ -1,0 +1,199 @@
+"""Core-module unit tests: modes, buckets, admission, traffic, exposure."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionPlan, AggregationMode, Commander,
+                        ControlPlane, CusumGuard, GroupPolicy, GroupRules,
+                        Predictor, Schedule, Supervisor, assign_groups,
+                        bits_per_element, group_sizes,
+                        group_cosines_from_workers, plan_traffic_ratio,
+                        resolve_policies, wire_bytes_per_device)
+from repro.core.exposure import ExposureModel, envelope_sweep
+
+
+# ---------------------------------------------------------------------------
+# bucket manager / group rules
+# ---------------------------------------------------------------------------
+
+def _fake_params():
+    z = lambda *s: jnp.zeros(s)
+    return {
+        "embed": {"tok": z(64, 8)},
+        "layers": {"attn": {"wq": z(8, 8), "q_bias": z(8)},
+                   "moe": {"router": z(8, 4), "w_up": z(4, 8, 16)},
+                   "norm1": {"scale": z(8)}},
+        "head": {"w": z(8, 64)},
+    }
+
+
+def test_group_rules_assignment():
+    groups = assign_groups(_fake_params())
+    assert groups["head"]["w"] == "head"
+    assert groups["layers"]["moe"]["router"] == "head"
+    assert groups["layers"]["moe"]["w_up"] == "backbone"
+    assert groups["layers"]["attn"]["wq"] == "backbone"
+    assert groups["layers"]["attn"]["q_bias"] == "norms"
+    assert groups["layers"]["norm1"]["scale"] == "norms"
+    assert groups["embed"]["tok"] == "embed"
+
+
+def test_resolve_policies_modes():
+    params = _fake_params()
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY)
+    pol = resolve_policies(params, plan)
+    assert pol["layers"]["attn"]["wq"].mode == AggregationMode.G_BINARY
+    assert pol["head"]["w"].mode == AggregationMode.FP32
+    assert pol["layers"]["norm1"]["scale"].mode == AggregationMode.FP32
+
+
+def test_plan_signature_stable_and_distinct():
+    a = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY)
+    b = AdmissionPlan.lowbit_backbone(AggregationMode.G_TERNARY)
+    assert a.signature() == AdmissionPlan.lowbit_backbone(
+        AggregationMode.G_BINARY).signature()
+    assert a.signature() != b.signature()
+    assert a.signature() != AdmissionPlan.fp32_all().signature()
+
+
+# ---------------------------------------------------------------------------
+# paper Table 6 accounting
+# ---------------------------------------------------------------------------
+
+def test_table6_traffic_ratios():
+    """ResNet-18/CIFAR-100 group sizes reproduce the paper's ratios."""
+    head = 512 * 100 + 100
+    sizes = {"backbone": 11_220_132 - head, "head": head}
+    rows = [
+        (AdmissionPlan.lowbit_all(AggregationMode.G_BINARY), 0.0313),
+        (AdmissionPlan.lowbit_all(AggregationMode.G_TERNARY), 0.0494),
+        (AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY), 0.0357),
+        (AdmissionPlan.lowbit_backbone(AggregationMode.G_TERNARY), 0.0537),
+        (AdmissionPlan.fp32_all(), 1.0),
+    ]
+    for plan, want in rows:
+        got = plan_traffic_ratio(sizes, plan)
+        assert abs(got - want) < 0.0035, (plan.signature(), got, want)
+
+
+def test_wire_bytes_ordering():
+    """packed_a2a < vote_psum < fp32 for any size and worker count."""
+    for n in (1 << 16, 1 << 24):
+        for w in (8, 32, 256):
+            f = wire_bytes_per_device(n, AggregationMode.FP32, Schedule.PSUM, w)
+            v = wire_bytes_per_device(n, AggregationMode.G_BINARY,
+                                      Schedule.VOTE_PSUM, w)
+            p = wire_bytes_per_device(n, AggregationMode.G_BINARY,
+                                      Schedule.PACKED_A2A, w)
+            assert p < v < f
+            assert f / v == pytest.approx(4.0)
+            assert f / p == pytest.approx(64 / 3, rel=0.01)  # ~21.3x
+
+
+# ---------------------------------------------------------------------------
+# control plane
+# ---------------------------------------------------------------------------
+
+def test_commander_ladder():
+    cmd = Commander(tau_binary=0.35, tau_ternary=0.30)
+    plan = cmd.propose({
+        "backbone": {"gbinary": 0.72, "gternary": 0.59},
+        "head": {"gbinary": 0.17, "gternary": 0.14},
+        "norms": {"gbinary": 0.9, "gternary": 0.9},
+        "embed": {"gbinary": 0.33, "gternary": 0.31},
+    })
+    assert plan.policy_for("backbone").mode == AggregationMode.G_BINARY
+    assert plan.policy_for("head").mode == AggregationMode.FP32
+    assert plan.policy_for("norms").mode == AggregationMode.FP32   # always
+    assert plan.policy_for("embed").mode == AggregationMode.G_TERNARY
+
+
+def test_control_plane_warmup_admit_recover_readmit():
+    cp = ControlPlane(warmup_steps=5,
+                      supervisor=Supervisor(
+                          guard=CusumGuard(kappa=0.0, h=0.3),
+                          cooldown_steps=5))
+    cos = {"backbone": {"gbinary": 0.8, "gternary": 0.7},
+           "head": {"gbinary": 0.1, "gternary": 0.1}}
+    # warm-up: FP32
+    for i in range(4):
+        plan = cp.step(1.0 - 0.01 * i)
+        assert plan.signature() == AdmissionPlan.fp32_all().signature()
+    plan = cp.step(0.9, cosines=cos)   # step 5: admission
+    assert plan.policy_for("backbone").mode == AggregationMode.G_BINARY
+    assert plan.policy_for("head").mode == AggregationMode.FP32
+    # degradation window -> recovery
+    recovered = False
+    for i in range(10):
+        plan = cp.step(0.9 + 0.2 * (i + 1))
+        if plan.signature() == AdmissionPlan.fp32_all().signature():
+            recovered = True
+            break
+    assert recovered
+    kinds = [e.kind for e in cp.events]
+    assert "admitted" in kinds and "recovery" in kinds
+    # healthy again -> re-admission after cooldown
+    for i in range(20):
+        plan = cp.step(0.5, cosines=cos)
+    assert plan.policy_for("backbone").mode == AggregationMode.G_BINARY
+    assert "readmitted" in [e.kind for e in cp.events]
+
+
+def test_predictor_forecast():
+    pred = Predictor(num_workers=32)
+    sizes = {"backbone": 10_000_000, "head": 50_000}
+    fp32 = pred.forecast(sizes, AdmissionPlan.fp32_all())
+    lb = pred.forecast(sizes, AdmissionPlan.lowbit_backbone(
+        AggregationMode.G_BINARY, schedule=Schedule.PACKED_A2A))
+    assert lb["allreduce_time_s"] < fp32["allreduce_time_s"]
+    assert lb["traffic_ratio"] < 0.04
+    assert fp32["traffic_ratio"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# cosine diagnostics (Table 5 structure)
+# ---------------------------------------------------------------------------
+
+def test_cosine_diagnostics_separate_aligned_from_misaligned(rng):
+    """Aligned workers -> high cosine; heavy-tailed minority-magnitude
+    gradients (one large worker vs many small opposite ones — the regime
+    behind the paper's weak classifier-head alignment) -> low/negative."""
+    w, n = 8, 4096
+    base = rng.randn(n).astype(np.float32)
+    aligned = np.stack([base + 0.3 * rng.randn(n) for _ in range(w)])
+    mag = np.abs(rng.randn(n)).astype(np.float32) + 0.1
+    heavy = np.stack([10.0 * mag] + [-0.1 * mag] * (w - 1))  # mean>0, majority<0
+    grads = {"layers": {"w": jnp.asarray(aligned)},
+             "head": {"w": jnp.asarray(heavy)}}
+    groups = {"layers": {"w": "backbone"}, "head": {"w": "head"}}
+    cos = group_cosines_from_workers(grads, groups)
+    assert float(cos["backbone"]["gbinary"]) > 0.5
+    assert float(cos["head"]["gbinary"]) < 0.0
+
+
+# ---------------------------------------------------------------------------
+# exposure model (paper Section 5 structure)
+# ---------------------------------------------------------------------------
+
+def test_exposure_hidden_under_bandwidth_pressure():
+    m = ExposureModel()
+    n = 8 << 20
+    r_busy = m.exposed(n, 32, wire_bytes_per_device=3 * n / 8)
+    assert r_busy["hidden"], r_busy
+    # tiny collective (cheap service) exposes the datapath
+    r_idle = m.exposed(n, 32, wire_bytes_per_device=1024)
+    assert r_idle["t_exposed_s"] > 0
+
+
+def test_envelope_sweep_shape():
+    rows = envelope_sweep()
+    assert set(rows) == {"a", "b", "c", "d"}
+    assert all(len(v) > 0 for v in rows.values())
+    # panel (a): deeper datapaths expose more at higher bandwidth
+    deep = [r for r in rows["a"] if r["depth_mult"] == 4.0]
+    shallow = [r for r in rows["a"] if r["depth_mult"] == 1.0]
+    assert max(r["exposed_pct"] for r in deep) >= \
+        max(r["exposed_pct"] for r in shallow)

@@ -1,0 +1,63 @@
+"""HLO cost-walk unit tests: loop trip counts, dot flops, ring wire model."""
+import textwrap
+
+from repro.launch.hlo_analysis import _wire_bytes
+from repro.launch.hlo_walk import parse_module, walk
+
+SAMPLE = textwrap.dedent("""
+%cond (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %gte = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7), metadata={op_name="trip"}
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %a = f32[8,16]{1,0} parameter(1)
+  %b = f32[16,4]{1,0} parameter(2)
+  %d = f32[8,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,4]{1,0} all-reduce(%d), channel_id=1, replica_groups=[4,4]<=[16], to_apply=%add
+  ROOT %t = (s32[]) tuple(%p)
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,4] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %init = (s32[]) tuple(%x)
+  %w = (s32[]) while(%init), condition=%cond, body=%body
+  %y = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r = f32[8,4]{1,0} tuple(%w)
+}
+""")
+
+
+def test_parse_and_trip_count():
+    comps = parse_module(SAMPLE)
+    assert {"cond", "body", "main"} <= set(comps)
+    assert comps["main"].is_entry
+    wk = walk(SAMPLE)
+    assert wk["loops"] == {"body": 7}
+
+
+def test_flops_scaled_by_trip_count():
+    wk = walk(SAMPLE)
+    # body dot: 2*8*4*16 = 1024 flops x 7 trips; entry dot: 2*128*128*16
+    body_dot = 2 * 8 * 4 * 16 * 7
+    entry_dot = 2 * 128 * 128 * 16
+    assert abs(wk["flops"] - (body_dot + entry_dot)) < 1e-6
+
+
+def test_collectives_scaled_by_trip_count():
+    wk = walk(SAMPLE)
+    # all-reduce payload 8*4*4 bytes, ring over group of 4: 2*(3/4)*128
+    assert abs(wk["wire_bytes"] - 7 * 2 * (3 / 4) * 128) < 1e-6
+    assert "all-reduce/f32/g4" in wk["wire_breakdown"]
+
+
+def test_ring_wire_model():
+    assert _wire_bytes("all-reduce", 100, 4) == 2 * 0.75 * 100
+    assert _wire_bytes("all-gather", 100, 4) == 0.75 * 100
+    assert _wire_bytes("reduce-scatter", 25, 4) == 75
+    assert _wire_bytes("all-to-all", 100, 4) == 75
+    assert _wire_bytes("collective-permute", 100, 2) == 100
+    assert _wire_bytes("all-reduce", 100, 1) == 0

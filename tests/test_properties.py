@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the system's invariants.
+
+Properties proved over randomized inputs:
+  * pack/unpack roundtrip preserves signs exactly;
+  * the packed majority equals the dense Section-2 equations for any W;
+  * majority is permutation-invariant in the worker axis;
+  * unanimous workers always win the vote; flipping all signs negates u;
+  * traffic accounting is a convex combination of per-mode ratios;
+  * the CUSUM guard triggers on sustained growth and stays quiet on
+    decreasing loss.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels as K
+from repro.kernels import ref
+from repro.core import (AdmissionPlan, AggregationMode, CusumGuard,
+                        GroupPolicy, bits_per_element, plan_traffic_ratio)
+
+wstrat = st.integers(min_value=1, max_value=16)
+rows = st.sampled_from([32, 64, 96])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=rows, seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(m, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(m, 128), jnp.float32)
+    words = K.pack_signs(x)
+    bits = ref.unpack_bits(words)
+    np.testing.assert_array_equal(np.asarray(bits),
+                                  (np.asarray(x) > 0).astype(np.uint32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=wstrat, seed=st.integers(0, 2**31 - 1))
+def test_packed_majority_equals_dense(w, seed):
+    rng = np.random.RandomState(seed)
+    n = 32 * 128
+    grads = rng.randn(w, n).astype(np.float32)
+    stack = jnp.stack([K.pack_signs(ref.to_plane(jnp.asarray(g)))
+                       for g in grads])
+    counts = K.popcount_stack(stack)
+    sw, mw = K.majority_decode(counts, num_workers=w)
+    u = ref.from_plane(K.unpack_ternary(sw, mw), n)
+    want = ref.gbinary_aggregate_dense(jnp.asarray(grads))
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=st.integers(2, 8), seed=st.integers(0, 2**31 - 1),
+       perm_seed=st.integers(0, 2**31 - 1))
+def test_majority_permutation_invariant(w, seed, perm_seed):
+    rng = np.random.RandomState(seed)
+    grads = rng.randn(w, 32 * 128).astype(np.float32)
+    perm = np.random.RandomState(perm_seed).permutation(w)
+    a = ref.gbinary_aggregate_dense(jnp.asarray(grads))
+    b = ref.gbinary_aggregate_dense(jnp.asarray(grads[perm]))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=wstrat, seed=st.integers(0, 2**31 - 1))
+def test_unanimous_vote_and_sign_flip(w, seed):
+    rng = np.random.RandomState(seed)
+    base = np.abs(rng.randn(32 * 128)).astype(np.float32) + 1e-3
+    grads = np.tile(base, (w, 1))
+    u = np.asarray(ref.gbinary_aggregate_dense(jnp.asarray(grads)))
+    assert np.all(u == 1.0)
+    u_neg = np.asarray(ref.gbinary_aggregate_dense(jnp.asarray(-grads)))
+    np.testing.assert_array_equal(u_neg, -u)
+
+
+@settings(max_examples=30, deadline=None)
+@given(nb=st.integers(1, 10**9), nh=st.integers(1, 10**7),
+       mode=st.sampled_from([AggregationMode.G_BINARY,
+                             AggregationMode.G_TERNARY]))
+def test_traffic_ratio_convex_combination(nb, nh, mode):
+    sizes = {"backbone": nb, "head": nh}
+    plan = AdmissionPlan.from_dict(
+        {"backbone": GroupPolicy(mode)},
+        default=GroupPolicy(AggregationMode.FP32))
+    r = plan_traffic_ratio(sizes, plan)
+    fb = nb / (nb + nh)
+    expect = fb * bits_per_element(mode) / 32.0 + (1 - fb) * 1.0
+    assert math.isclose(r, expect, rel_tol=1e-12)
+    assert bits_per_element(mode) / 32.0 <= r <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(start=st.floats(0.5, 5.0), slope=st.floats(0.01, 0.2))
+def test_cusum_triggers_on_sustained_growth(start, slope):
+    g = CusumGuard(kappa=0.005, h=0.2)
+    triggered = False
+    for i in range(200):
+        if g.update(start + slope * i):
+            triggered = True
+            break
+    assert triggered
+
+
+@settings(max_examples=20, deadline=None)
+@given(start=st.floats(0.5, 5.0), decay=st.floats(0.9, 0.999),
+       noise_seed=st.integers(0, 2**31 - 1))
+def test_cusum_quiet_on_decreasing_loss(start, decay, noise_seed):
+    rng = np.random.RandomState(noise_seed)
+    g = CusumGuard(kappa=0.01, h=0.25)
+    loss = start
+    for _ in range(200):
+        loss *= decay
+        assert not g.update(loss + abs(rng.randn()) * 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=rows, phase=st.integers(0, 2))
+def test_ternary_gate_keeps_two_of_three(m, phase):
+    words = ref.ternary_gate_words(m, phase=phase)
+    bits = np.asarray(ref.unpack_bits(words)).reshape(-1)
+    idx = np.arange(bits.size)
+    np.testing.assert_array_equal(bits, ((idx + phase) % 3 != 2))
+    kept = bits.mean()
+    assert abs(kept - 2 / 3) < 1e-3
