@@ -5,19 +5,24 @@ on v5e ICI constants, per path.  Like the paper's figure these are modeled
 communication times for the gradient component only — not end-to-end step
 speedups.  SignOfMean is included only as the optimizer reference (its
 communication is the FP32 path, the sign is taken after the mean).
+
+Paths are named by their *registered schedule backend* — the baselines
+resolve through the same ``repro.fabric`` registry the production
+schedules use, so a newly registered collective shows up here by name.
 """
-from repro.core.modes import AggregationMode, Schedule
+from repro.core.modes import AggregationMode
 from repro.core.traffic import (GPT2_XL_PARAMS, IciModel, modeled_comm_time,
                                 wire_bytes_per_device)
+from repro.fabric import get_schedule
 
 W = 32
 PATHS = [
-    ("fp32_ring_allreduce", AggregationMode.FP32, Schedule.PSUM),
-    ("gbinary_vote_psum", AggregationMode.G_BINARY, Schedule.VOTE_PSUM),
-    ("gbinary_packed_a2a", AggregationMode.G_BINARY, Schedule.PACKED_A2A),
-    ("gternary_packed_a2a", AggregationMode.G_TERNARY, Schedule.PACKED_A2A),
-    ("majority_sign_sgd(sw)", AggregationMode.G_BINARY, Schedule.VOTE_PSUM),
-    ("sign_of_mean(ref)", AggregationMode.FP32, Schedule.PSUM),
+    ("fp32_ring_allreduce", AggregationMode.FP32, "psum"),
+    ("gbinary_vote_psum", AggregationMode.G_BINARY, "vote_psum"),
+    ("gbinary_packed_a2a", AggregationMode.G_BINARY, "packed_a2a"),
+    ("gternary_packed_a2a", AggregationMode.G_TERNARY, "packed_a2a"),
+    ("majority_sign_sgd(sw)", AggregationMode.G_BINARY, "majority_sign_sgd"),
+    ("sign_of_mean(ref)", AggregationMode.FP32, "sign_of_mean"),
 ]
 
 
@@ -26,8 +31,14 @@ def rows():
     ici = IciModel()
     base = None
     for name, mode, sched in PATHS:
-        t = modeled_comm_time(GPT2_XL_PARAMS, mode, sched, W, ici)
-        b = wire_bytes_per_device(GPT2_XL_PARAMS, mode, sched, W)
+        backend = get_schedule(sched)            # resolves or raises
+        b = backend.wire_bytes_per_device(GPT2_XL_PARAMS, mode, W)
+        t = ici.collective_time(b, W)
+        # the module-level accounting agrees with the backend's own model
+        assert b == wire_bytes_per_device(GPT2_XL_PARAMS, mode,
+                                          backend.name, W)
+        assert t == modeled_comm_time(GPT2_XL_PARAMS, mode, backend.name, W,
+                                      ici)
         if base is None:
             base = t
         out.append((f"comm_model/gpt2xl/{name}", t * 1e6,

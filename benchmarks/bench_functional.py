@@ -13,7 +13,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kernels as K
+from repro.core import AdmissionPlan, AggregationMode, GroupPolicy
+from repro.fabric import Fabric
 from repro.kernels import ref
+
+
+def _fabric_session_row():
+    """End-to-end session check: Fabric.aggregate under a mixed plan.
+
+    Host-local session (one worker): the G-Binary backbone reduces to
+    sign(g), the FP32 head to g itself — mode-specific oracles through
+    the full registry-dispatch path.
+    """
+    rng = np.random.RandomState(11)
+    grads = {"backbone": {"w": jnp.asarray(rng.randn(256, 128), jnp.float32)},
+             "head": {"w": jnp.asarray(rng.randn(128, 16), jnp.float32)}}
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
+                                         error_feedback=False)
+    fabric = Fabric()                       # mesh-less: 1 virtual worker
+    t0 = time.perf_counter()
+    agg, _ = fabric.aggregate(grads, plan)
+    jax.block_until_ready(agg)
+    t_us = (time.perf_counter() - t0) * 1e6
+    ok = (np.array_equal(np.asarray(agg["backbone"]["w"]),
+                         np.sign(np.asarray(grads["backbone"]["w"])))
+          and np.allclose(np.asarray(agg["head"]["w"]),
+                          np.asarray(grads["head"]["w"])))
+    return ("functional/fabric_session_mixed_plan", t_us, f"oracle_exact={ok}")
 
 
 def rows():
@@ -50,4 +76,5 @@ def rows():
         ("functional/identity_readback", 0.0, f"byte_exact={ident_ok}"),
         ("functional/gbinary_pipeline", t_bin, f"oracle_exact={bin_ok}"),
         ("functional/gternary_pipeline", t_bin, f"oracle_exact={ter_ok}"),
+        _fabric_session_row(),
     ]

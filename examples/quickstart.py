@@ -14,6 +14,7 @@ from jax.sharding import AxisType
 from repro.configs import get_config
 from repro.core import AdmissionPlan, AggregationMode, Schedule
 from repro.data import SyntheticLMStream
+from repro.fabric import Fabric
 from repro.optim import AdamW
 from repro.runtime import Trainer, TrainerConfig
 
@@ -22,6 +23,10 @@ def main():
     # 8 simulated devices: 4-way data parallel x 2-way tensor parallel
     mesh = jax.make_mesh((4, 2), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
+
+    # One Fabric session owns the aggregation surface: worker count,
+    # policy resolution, schedule-backend dispatch, compiled-step cache.
+    fabric = Fabric(mesh, dp_axes=("data",))
 
     cfg = get_config("qwen3_0p6b", smoke=True)      # reduced qwen3 family
     data = SyntheticLMStream(vocab=cfg.vocab_size, seq_len=64, batch=16,
@@ -33,7 +38,7 @@ def main():
                                          schedule=Schedule.PACKED_A2A)
 
     trainer = Trainer(cfg, mesh, AdamW(peak_lr=2e-3, total_steps=200),
-                      data, plan=plan,
+                      data, plan=plan, fabric=fabric,
                       tcfg=TrainerConfig(dp_axes=("data",), log_interval=20))
     history = trainer.run(120)
 

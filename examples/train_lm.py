@@ -20,6 +20,7 @@ from jax.sharding import AxisType
 
 from repro.core import AdmissionPlan, AggregationMode, Schedule
 from repro.data import SyntheticLMStream
+from repro.fabric import Fabric
 from repro.models import ModelConfig
 from repro.optim import AdamW
 from repro.runtime import Trainer, TrainerConfig
@@ -68,7 +69,7 @@ def main():
 
     trainer = Trainer(
         cfg, mesh, AdamW(peak_lr=args.lr, total_steps=args.steps),
-        data, plan=plan,
+        data, plan=plan, fabric=Fabric(mesh, dp_axes=("data",)),
         tcfg=TrainerConfig(dp_axes=("data",), log_interval=20,
                            checkpoint_interval=100),
         ckpt_dir=args.ckpt_dir)

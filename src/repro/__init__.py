@@ -3,6 +3,10 @@
 JAX (+ Pallas) implementation of Wang, Huang & Lung, "NEURON-Fabric:
 CXL-Side Low-Bit Gradient Aggregation for Distributed Training"
 (CS.DC 2026), adapted to the TPU ICI collective path.  See DESIGN.md.
+
+The central API is the :class:`repro.fabric.Fabric` session — one
+control surface over aggregation, backed by a pluggable schedule-backend
+registry (``repro.fabric.register_schedule``).
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

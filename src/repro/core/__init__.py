@@ -11,7 +11,8 @@ The paper's contribution as a composable JAX module:
   * :mod:`traffic`      — payload ratios + wire-byte/time models (Table 6, Fig 7)
   * :mod:`exposure`     — datapath timing-exposure model (Section 5, Fig 3)
 """
-from .modes import AggregationMode, Schedule, bits_per_element, traffic_ratio
+from .modes import (AggregationMode, Schedule, bits_per_element,
+                    schedule_name, traffic_ratio, wire_schedule)
 from .lowbit import (LeafPolicy, aggregate_leaf, fp32_allreduce,
                      lowbit_packed_a2a, lowbit_vote_psum, majority_sign_sgd,
                      sign_of_mean)
@@ -27,7 +28,8 @@ from .traffic import (IciModel, modeled_comm_time, payload_bytes,
 from .exposure import ExposureModel, TpuDatapathModel, envelope_sweep
 
 __all__ = [
-    "AggregationMode", "Schedule", "bits_per_element", "traffic_ratio",
+    "AggregationMode", "Schedule", "bits_per_element", "schedule_name",
+    "traffic_ratio", "wire_schedule",
     "LeafPolicy", "aggregate_leaf", "fp32_allreduce", "lowbit_packed_a2a",
     "lowbit_vote_psum", "majority_sign_sgd", "sign_of_mean",
     "AdmissionPlan", "GroupPolicy", "GroupRules", "assign_groups",

@@ -1,9 +1,11 @@
-"""Tree-level gradient aggregation under an admission plan.
+"""Tree-level gradient aggregation under an admission plan (legacy seam).
 
-This is the seam the training runtime calls: a gradient pytree goes in,
-and each leaf is aggregated under its resolved :class:`LeafPolicy`
-(FP32 / G-Binary / G-Ternary x schedule), exactly as the paper's
-controller applies the latched mode per admitted bucket.
+The canonical implementation lives in :mod:`repro.fabric` — a
+:class:`~repro.fabric.Fabric` session owns dispatch (via the
+schedule-backend registry), the aggregation context, and EF-state
+handling.  This module keeps the original free-function surface as thin
+deprecation shims plus :func:`init_ef_states`, the worker-local EF
+initializer the session builds on.
 
 Error-feedback residual state (beyond paper, optional) is carried as a
 pytree matching the params: EF-enabled leaves hold a ``(1, *shape)`` local
@@ -19,11 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from .buckets import AdmissionPlan, GroupRules, resolve_policies
-from .lowbit import LeafPolicy, aggregate_leaf
 
 Axes = Sequence[str] | str
-
-_is_policy = lambda x: isinstance(x, LeafPolicy)
 
 
 def init_ef_states(params: Any, policies: Any, dtype=jnp.float32) -> Any:
@@ -35,53 +34,19 @@ def init_ef_states(params: Any, policies: Any, dtype=jnp.float32) -> Any:
     return jax.tree.map(make, params, policies, is_leaf=None)
 
 
-def ef_specs(pspecs: Any, policies: Any, dp_axes) -> Any:
-    """PartitionSpecs for the EF tree (leading dim sharded over DP)."""
-    from jax.sharding import PartitionSpec as P
-
-    def spec(ps, pol):
-        if not pol.error_feedback:
-            return P()
-        inner = tuple(ps) if ps is not None else ()
-        return P(tuple(dp_axes) if not isinstance(dp_axes, str) else dp_axes,
-                 *inner)
-    return jax.tree.map(spec, pspecs, policies,
-                        is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple)) or isinstance(x, P))
-
-
 def aggregate_gradients(grads: Any, policies: Any, dp_axes: Axes,
                         num_workers: int, ef_states: Any | None = None,
                         interpret: bool | None = None):
-    """Aggregate a gradient tree leaf-by-leaf under resolved policies.
+    """Deprecated free-function shim — use ``Fabric.aggregate``.
 
-    Runs inside a shard_map whose manual axes are ``dp_axes``.  Returns
-    ``(aggregates, new_ef_states)``; ``new_ef_states`` mirrors the input
-    sentinel structure.
+    Aggregates a gradient tree leaf-by-leaf under resolved policies,
+    inside a shard_map whose manual axes are ``dp_axes``.  Returns
+    ``(aggregates, new_ef_states)``.
     """
-    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
-    p_leaves = treedef.flatten_up_to(policies)
-    if ef_states is None:
-        e_leaves = [None] * len(g_leaves)
-    else:
-        e_leaves = treedef.flatten_up_to(ef_states)
-
-    agg, new_ef = [], []
-    for g, pol, e in zip(g_leaves, p_leaves, e_leaves):
-        use_ef = pol.error_feedback and e is not None and e.ndim > 0
-        ef_in = e[0] if use_ef else None
-        u, ef_out = aggregate_leaf(g, pol, dp_axes, num_workers,
-                                   ef=ef_in, interpret=interpret)
-        agg.append(u)
-        if e is None:
-            new_ef.append(None)
-        elif use_ef:
-            new_ef.append(ef_out[None])
-        else:
-            new_ef.append(e)
-    aggregates = jax.tree_util.tree_unflatten(treedef, agg)
-    if ef_states is None:
-        return aggregates, None
-    return aggregates, jax.tree_util.tree_unflatten(treedef, new_ef)
+    from ..fabric import AggregationContext, aggregate_tree
+    ctx = AggregationContext(dp_axes=dp_axes, num_workers=num_workers,
+                             interpret=interpret)
+    return aggregate_tree(ctx, grads, policies, ef_states=ef_states)
 
 
 def make_policy_tree(params: Any, plan: AdmissionPlan,

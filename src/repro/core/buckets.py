@@ -21,7 +21,8 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from .lowbit import LeafPolicy
-from .modes import AggregationMode, DEFAULT_SCHEDULE, Schedule
+from .modes import (AggregationMode, DEFAULT_SCHEDULE, Schedule,
+                    schedule_name)
 
 
 def path_name(key_path) -> str:
@@ -85,11 +86,17 @@ def group_sizes(params: Any, rules: GroupRules | None = None) -> dict[str, int]:
 
 @dataclasses.dataclass(frozen=True)
 class GroupPolicy:
+    """Mode + schedule + EF flag for one parameter group.
+
+    ``schedule`` may be a built-in :class:`Schedule`, the string name of
+    any backend registered via ``repro.fabric.register_schedule``, or
+    None for the mode default.
+    """
     mode: AggregationMode = AggregationMode.FP32
-    schedule: Schedule | None = None          # None -> mode default
+    schedule: Schedule | str | None = None    # None -> mode default
     error_feedback: bool = False
 
-    def resolved_schedule(self) -> Schedule:
+    def resolved_schedule(self) -> Schedule | str:
         return self.schedule or DEFAULT_SCHEDULE[self.mode]
 
 
@@ -117,10 +124,10 @@ class AdmissionPlan:
         return self.default
 
     def signature(self) -> str:
-        items = [f"{g}:{p.mode.value}:{p.resolved_schedule().value}"
+        items = [f"{g}:{p.mode.value}:{schedule_name(p.resolved_schedule())}"
                  f":{int(p.error_feedback)}" for g, p in self.policies]
         d = self.default
-        items.append(f"*:{d.mode.value}:{d.resolved_schedule().value}"
+        items.append(f"*:{d.mode.value}:{schedule_name(d.resolved_schedule())}"
                      f":{int(d.error_feedback)}")
         return "|".join(items)
 
@@ -131,14 +138,14 @@ class AdmissionPlan:
 
     @staticmethod
     def lowbit_all(mode: AggregationMode = AggregationMode.G_BINARY,
-                   schedule: Schedule | None = None,
+                   schedule: Schedule | str | None = None,
                    error_feedback: bool = False) -> "AdmissionPlan":
         """'Full-path' low-bit: the configuration CIFAR-100 rejects."""
         return AdmissionPlan(default=GroupPolicy(mode, schedule, error_feedback))
 
     @staticmethod
     def lowbit_backbone(mode: AggregationMode = AggregationMode.G_BINARY,
-                        schedule: Schedule | None = None,
+                        schedule: Schedule | str | None = None,
                         error_feedback: bool = False) -> "AdmissionPlan":
         """The paper's recovered operating point: low-bit backbone, FP32 head
         (and FP32 for norms/embeddings/routers)."""

@@ -38,7 +38,6 @@ EXPERIMENTS.md) at the cost of one residual buffer per admitted bucket.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Sequence
 
 import jax
@@ -227,9 +226,13 @@ def sign_of_mean(g: jax.Array, dp_axes: Axes) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class LeafPolicy:
-    """Resolved aggregation policy for one gradient leaf."""
+    """Resolved aggregation policy for one gradient leaf.
+
+    ``schedule`` may be a built-in :class:`Schedule` member or the string
+    name of any backend registered via ``repro.fabric.register_schedule``.
+    """
     mode: AggregationMode
-    schedule: Schedule
+    schedule: Schedule | str
     model_spec: Any = None          # PartitionSpec over auto (TP) axes
     gate_phase: int = 0
     error_feedback: bool = False
@@ -238,19 +241,15 @@ class LeafPolicy:
 def aggregate_leaf(g: jax.Array, policy: LeafPolicy, dp_axes: Axes,
                    num_workers: int, ef: jax.Array | None = None,
                    interpret: bool | None = None):
-    """Aggregate one gradient leaf under its admitted policy.
+    """Deprecated free-function shim — use ``repro.fabric``.
 
-    Returns ``(aggregate, new_ef)``; for FP32 the aggregate is the mean
-    gradient, for low-bit modes it is the ternary direction in {-1, 0, +1}.
+    Dispatches through the schedule-backend registry (no hardcoded
+    mode/schedule branching lives here anymore).  Returns
+    ``(aggregate, new_ef)``; for FP32 the aggregate is the mean gradient,
+    for low-bit modes it is the ternary direction in {-1, 0, +1}.
     """
-    mode, sched = policy.mode, policy.schedule
-    if mode in (AggregationMode.FP32, AggregationMode.IDENTITY):
-        return fp32_allreduce(g, dp_axes), ef
-    ternary = mode == AggregationMode.G_TERNARY
-    if sched == Schedule.PACKED_A2A:
-        return lowbit_packed_a2a(
-            g, dp_axes, num_workers, model_spec=policy.model_spec,
-            ternary=ternary, gate_phase=policy.gate_phase, ef=ef,
-            interpret=interpret)
-    return lowbit_vote_psum(g, dp_axes, num_workers, ternary=ternary,
-                            gate_phase=policy.gate_phase, ef=ef)
+    from ..fabric import AggregationContext
+    from ..fabric.session import aggregate_leaf as _dispatch
+    ctx = AggregationContext(dp_axes=dp_axes, num_workers=num_workers,
+                             interpret=interpret)
+    return _dispatch(ctx, g, policy, ef=ef)

@@ -72,3 +72,44 @@ DEFAULT_SCHEDULE = {
     AggregationMode.G_BINARY: Schedule.VOTE_PSUM,
     AggregationMode.G_TERNARY: Schedule.VOTE_PSUM,
 }
+
+
+def schedule_name(schedule) -> str:
+    """Canonical registry key for a schedule given as enum or plain string.
+
+    Plans may name schedules outside the built-in :class:`Schedule` enum —
+    any backend registered with ``repro.fabric.register_schedule`` is
+    addressable by its string name.
+    """
+    return schedule.value if isinstance(schedule, enum.Enum) else str(schedule)
+
+
+#: built-in schedules that only carry low-bit payloads; FP32/IDENTITY
+#: buckets nominally on one of these ride the psum bypass instead.
+_LOWBIT_ONLY_SCHEDULES = frozenset(
+    {Schedule.VOTE_PSUM.value, Schedule.PACKED_A2A.value})
+
+
+def wire_schedule(mode, schedule):
+    """Wire-level schedule actually used for a (mode, schedule) pair.
+
+    Two mode/schedule mismatches are normalized, both preserving the
+    pre-registry dispatch semantics:
+
+      * FP32/IDENTITY aggregates carried on a built-in low-bit schedule
+        (vote_psum / packed_a2a) travel on the psum path — the paper's
+        bypass semantics (and what the 4-bytes/element wire accounting
+        assumes);
+      * low-bit aggregates nominally on ``psum`` travel on the dense
+        vote_psum path (a 1-bit mode has no FP32-mean realization).
+
+    Every other schedule — including registered custom backends such as
+    the ``sign_of_mean`` baseline — dispatches as named for every mode.
+    """
+    lowbit = AggregationMode(mode).is_lowbit
+    name = schedule_name(schedule)
+    if not lowbit and name in _LOWBIT_ONLY_SCHEDULES:
+        return Schedule.PSUM
+    if lowbit and name == Schedule.PSUM.value:
+        return Schedule.VOTE_PSUM
+    return schedule

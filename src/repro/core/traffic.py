@@ -18,7 +18,8 @@ import dataclasses
 from typing import Mapping
 
 from .buckets import AdmissionPlan
-from .modes import AggregationMode, Schedule, bits_per_element
+from .modes import (AggregationMode, Schedule, bits_per_element,
+                    wire_schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -50,26 +51,28 @@ def plan_traffic_ratio(sizes: Mapping[str, int], plan: AdmissionPlan) -> float:
 # ---------------------------------------------------------------------------
 
 def wire_bytes_per_device(n_elements: int, mode: AggregationMode,
-                          schedule: Schedule, num_workers: int,
+                          schedule: Schedule | str, num_workers: int,
                           dtype_bytes: int = 4) -> float:
     """Ring-model bytes per device for one aggregation of n elements.
+
+    The model lives on the schedule backend (its
+    ``wire_bytes_per_device`` method) so byte accounting and dispatch
+    can never disagree.  The built-ins:
 
     fp32 psum        : 2 (W-1)/W * 4N          (reduce-scatter + all-gather)
     vote_psum (int8) : 2 (W-1)/W * 1N
     packed_a2a       : (W-1)/W * (N/8)          all_to_all of packed signs
                        + (W-1)/W * (N/4)        all-gather of sign+mask words
     """
-    w = num_workers
-    if w <= 1:
+    if num_workers <= 1:
         return 0.0
-    f = (w - 1) / w
-    if mode in (AggregationMode.FP32, AggregationMode.IDENTITY):
-        return 2.0 * f * dtype_bytes * n_elements
-    if schedule == Schedule.VOTE_PSUM:
-        return 2.0 * f * 1.0 * n_elements
-    if schedule == Schedule.PACKED_A2A:
-        return f * (n_elements / 8.0) + f * (n_elements / 4.0)
-    raise ValueError(f"unknown schedule {schedule}")
+    from ..fabric import get_schedule
+    backend = get_schedule(wire_schedule(mode, schedule))
+    fn = getattr(backend, "wire_bytes_per_device", None)
+    if fn is None:
+        raise ValueError(f"schedule {schedule!r} has no wire-byte model; "
+                         f"give its backend a wire_bytes_per_device method")
+    return fn(n_elements, mode, num_workers, dtype_bytes=dtype_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""NEURON-Fabric session API: one control surface over aggregation.
+
+  * :mod:`registry` — :class:`ScheduleBackend` protocol + the
+    ``@register_schedule`` registry (the extension seam for new
+    collectives);
+  * :mod:`backends` — built-in backends: ``psum``/``fp32``,
+    ``vote_psum``, ``packed_a2a``, plus the Section-9 baselines;
+  * :mod:`session`  — the :class:`Fabric` session object owning worker
+    count, policy resolution, EF state, registry dispatch, and the
+    per-plan jit cache.
+
+Quick use::
+
+    fabric = Fabric(mesh, dp_axes=("data",))
+    step = fabric.step_for(cfg, optimizer, plan, params)   # cached jit
+    agg, ef = fabric.aggregate(grads, plan, ef)            # in shard_map
+"""
+from .registry import (AggregationContext, ScheduleBackend,
+                       available_schedules, get_schedule, register_schedule,
+                       unregister_schedule)
+from . import backends as _backends          # registers the built-ins
+from .session import (CompiledStep, Fabric, TrainState, aggregate_leaf,
+                      aggregate_tree, dp_num_workers)
+
+__all__ = [
+    "AggregationContext", "ScheduleBackend", "available_schedules",
+    "get_schedule", "register_schedule", "unregister_schedule",
+    "CompiledStep", "Fabric", "TrainState", "aggregate_leaf",
+    "aggregate_tree", "dp_num_workers",
+]

@@ -1,0 +1,87 @@
+"""Built-in schedule backends: the paper's collectives behind the registry.
+
+Each backend wraps one of the core collectives (:mod:`repro.core.lowbit`)
+in the uniform ``aggregate(ctx, g, policy, ef)`` signature.  The Section-9
+baselines (MajoritySignSGD, SignOfMean) are registered too, so experiment
+plans can select them by name exactly like the production schedules.
+"""
+from __future__ import annotations
+
+from ..core.lowbit import (fp32_allreduce, lowbit_packed_a2a,
+                           lowbit_vote_psum, sign_of_mean)
+from ..core.modes import AggregationMode, Schedule
+from .registry import AggregationContext, register_schedule
+
+
+def _ternary(policy) -> bool:
+    return AggregationMode(policy.mode) == AggregationMode.G_TERNARY
+
+
+@register_schedule(Schedule.PSUM, "fp32")
+class Fp32AllreduceBackend:
+    """FP32 mean via XLA psum — the paper's bypass / calibration path."""
+
+    name = "psum"
+
+    def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        return fp32_allreduce(g, ctx.dp_axes), ef
+
+    def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
+                              dtype_bytes: int = 4) -> float:
+        f = (num_workers - 1) / num_workers
+        return 2.0 * f * dtype_bytes * n_elements
+
+
+@register_schedule(Schedule.VOTE_PSUM, "majority_sign_sgd")
+class VotePsumBackend:
+    """Dense int8 sign votes + one psum (works on any sharding).
+
+    Registered under ``majority_sign_sgd`` too: the software baseline is
+    update-rule-identical to G-Binary on this schedule (paper Section 9).
+    """
+
+    name = "vote_psum"
+
+    def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        return lowbit_vote_psum(
+            g, ctx.dp_axes, ctx.num_workers, ternary=_ternary(policy),
+            gate_phase=policy.gate_phase, ef=ef)
+
+    def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
+                              dtype_bytes: int = 4) -> float:
+        f = (num_workers - 1) / num_workers
+        return 2.0 * f * 1.0 * n_elements
+
+
+@register_schedule(Schedule.PACKED_A2A)
+class PackedA2ABackend:
+    """The controller schedule: pack -> all_to_all -> PopCount -> gather."""
+
+    name = "packed_a2a"
+
+    def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        return lowbit_packed_a2a(
+            g, ctx.dp_axes, ctx.num_workers,
+            model_spec=getattr(policy, "model_spec", None),
+            ternary=_ternary(policy), gate_phase=policy.gate_phase, ef=ef,
+            interpret=ctx.interpret)
+
+    def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
+                              dtype_bytes: int = 4) -> float:
+        f = (num_workers - 1) / num_workers
+        return f * (n_elements / 8.0) + f * (n_elements / 4.0)
+
+
+@register_schedule("sign_of_mean")
+class SignOfMeanBackend:
+    """Sign *after* the FP32 mean — optimizer reference, FP32 wire cost."""
+
+    name = "sign_of_mean"
+
+    def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        return sign_of_mean(g, ctx.dp_axes), ef
+
+    def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
+                              dtype_bytes: int = 4) -> float:
+        f = (num_workers - 1) / num_workers
+        return 2.0 * f * dtype_bytes * n_elements

@@ -1,0 +1,117 @@
+"""Schedule-backend registry: the Fabric extension seam.
+
+A *schedule backend* owns the wire-level algorithm that realizes an
+aggregation mode on the mesh (how bytes move: psum, packed all_to_all,
+a future DynamiQ-style multi-hop compressed all-reduce, a CXL-CCL-style
+pooled-memory collective, ...).  Backends register under a string name
+and are resolved by :func:`get_schedule`; core dispatch never hardcodes
+a schedule, so new collectives plug in without editing core files:
+
+    from repro.fabric import register_schedule
+
+    @register_schedule("my_sched")
+    class MySched:
+        name = "my_sched"
+        def aggregate(self, ctx, g, policy, ef=None):
+            return my_collective(g, ctx.dp_axes), ef
+
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
+                                         schedule="my_sched")
+
+Every backend sees one uniform signature: ``aggregate(ctx, g, policy,
+ef)`` where ``ctx`` (:class:`AggregationContext`) carries the session
+facts (dp_axes / num_workers / interpret) that the old free functions
+each re-threaded by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+from ..core.modes import schedule_name
+
+Axes = Sequence[str] | str
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationContext:
+    """Session facts a backend needs to run its collective.
+
+    ``dp_axes``     — manual mesh axes the aggregation reduces over;
+    ``num_workers`` — product of the dp-axis sizes (the paper's W);
+    ``interpret``   — Pallas interpret-mode override for kernel backends;
+    ``mesh``        — the owning mesh, when a backend needs topology
+                      (None for host-local / virtual-worker use).
+    """
+    dp_axes: Any = ()
+    num_workers: int = 1
+    interpret: bool | None = None
+    mesh: Any = None
+
+
+@runtime_checkable
+class ScheduleBackend(Protocol):
+    """Protocol every registered schedule backend implements.
+
+    ``aggregate`` runs *inside* a shard_map whose manual axes are
+    ``ctx.dp_axes`` and returns ``(aggregate, new_ef)``; backends that do
+    not thread error feedback return ``ef`` unchanged.  Backends may
+    additionally expose ``wire_bytes_per_device(n_elements, mode,
+    num_workers, dtype_bytes)`` to participate in the traffic model.
+    """
+
+    name: str
+
+    def aggregate(self, ctx: AggregationContext, g: Any, policy: Any,
+                  ef: Any | None = None) -> tuple[Any, Any | None]: ...
+
+
+_REGISTRY: dict[str, ScheduleBackend] = {}
+
+
+def register_schedule(name: Any, *aliases: Any, override: bool = False):
+    """Class/instance decorator registering a backend under ``name``.
+
+    Accepts a backend class (instantiated with no arguments) or a ready
+    instance.  ``aliases`` register the same backend under extra names;
+    re-registering an existing name raises unless ``override=True``.
+    """
+    keys = [schedule_name(k) for k in (name, *aliases)]
+
+    def deco(obj):
+        backend = obj() if isinstance(obj, type) else obj
+        if not override:
+            # validate every key before inserting any, so a clash on an
+            # alias cannot leave the registry half-registered
+            for key in keys:
+                if key in _REGISTRY:
+                    raise ValueError(
+                        f"schedule backend {key!r} already registered "
+                        f"({type(_REGISTRY[key]).__name__}); pass "
+                        f"override=True to replace it")
+        for key in keys:
+            _REGISTRY[key] = backend
+        return obj
+
+    return deco
+
+
+def unregister_schedule(name: Any) -> None:
+    """Remove a backend (primarily for tests tearing down toy schedules)."""
+    _REGISTRY.pop(schedule_name(name), None)
+
+
+def get_schedule(name: Any) -> ScheduleBackend:
+    """Resolve a schedule name (str or Schedule enum) to its backend."""
+    key = schedule_name(name)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown schedule backend {key!r}; available: "
+            f"{available_schedules()}. Register one with "
+            f"@register_schedule({key!r}).") from None
+
+
+def available_schedules() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

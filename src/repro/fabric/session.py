@@ -1,0 +1,363 @@
+"""The Fabric session: one control surface over the aggregation fabric.
+
+A :class:`Fabric` is constructed once from ``(mesh, dp_axes, rules,
+interpret)`` and owns everything the old free-function API made every
+caller re-thread by hand: the worker count, group assignment, policy
+resolution, error-feedback state init/specs, per-leaf schedule dispatch
+(via the backend registry), and the per-plan-signature jit cache for
+compiled train steps.  It is the seam later scaling work (new
+collectives, async overlap, multi-backend) plugs into — swap or add a
+registered :class:`~repro.fabric.registry.ScheduleBackend` and every
+layer above (Trainer, dry-run, benchmarks) picks it up.
+
+Layering: ``fabric`` sits above ``core`` (math + policy vocabulary) and
+below ``runtime`` (Trainer control loop); model/optimizer specifics are
+imported lazily inside :meth:`Fabric.build_step` so the session stays
+usable for host-local aggregation without the full model stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.aggregate import init_ef_states
+from ..core.buckets import (AdmissionPlan, GroupRules, assign_groups,
+                            group_sizes, resolve_policies)
+from ..core.modes import wire_schedule
+from .registry import AggregationContext, get_schedule
+
+Axes = Sequence[str] | str
+
+_is_policy = lambda x: hasattr(x, "mode") and hasattr(x, "schedule")
+
+
+# ---------------------------------------------------------------------------
+# leaf- and tree-level aggregation (registry-dispatched)
+# ---------------------------------------------------------------------------
+
+def aggregate_leaf(ctx: AggregationContext, g: jax.Array, policy,
+                   ef: jax.Array | None = None):
+    """Aggregate one gradient leaf under its admitted policy.
+
+    Pure registry dispatch: the wire schedule (FP32/IDENTITY always ride
+    psum) names the backend; the backend interprets the rest of the
+    policy.  Returns ``(aggregate, new_ef)``.
+    """
+    backend = get_schedule(wire_schedule(policy.mode, policy.schedule))
+    return backend.aggregate(ctx, g, policy, ef)
+
+
+def aggregate_tree(ctx: AggregationContext, grads: Any, policies: Any,
+                   ef_states: Any | None = None):
+    """Aggregate a gradient pytree leaf-by-leaf under resolved policies.
+
+    Runs inside a shard_map whose manual axes are ``ctx.dp_axes``.
+    Error-feedback leaves hold a ``(1, *shape)`` local residual (globally
+    ``(W, *shape)`` sharded over the DP axes); disabled leaves hold a
+    scalar sentinel so the tree structure stays static across plans.
+    Returns ``(aggregates, new_ef_states)`` mirroring the sentinel
+    structure.
+    """
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    p_leaves = treedef.flatten_up_to(policies)
+    if ef_states is None:
+        e_leaves = [None] * len(g_leaves)
+    else:
+        e_leaves = treedef.flatten_up_to(ef_states)
+
+    agg, new_ef = [], []
+    for g, pol, e in zip(g_leaves, p_leaves, e_leaves):
+        use_ef = pol.error_feedback and e is not None and e.ndim > 0
+        ef_in = e[0] if use_ef else None
+        u, ef_out = aggregate_leaf(ctx, g, pol, ef=ef_in)
+        agg.append(u)
+        if e is None:
+            new_ef.append(None)
+        elif use_ef:
+            new_ef.append(ef_out[None])
+        else:
+            new_ef.append(e)
+    aggregates = jax.tree_util.tree_unflatten(treedef, agg)
+    if ef_states is None:
+        return aggregates, None
+    return aggregates, jax.tree_util.tree_unflatten(treedef, new_ef)
+
+
+# ---------------------------------------------------------------------------
+# train-step state (owned here; re-exported by repro.runtime)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    ef: Any                    # error-feedback residuals (sentinel tree)
+    step: jax.Array
+
+
+class CompiledStep(NamedTuple):
+    """One compiled train step and its I/O contracts.
+
+    Tuple-compatible with the legacy ``build_train_step`` return value
+    ``(jitted, state_shardings, batch_sharding, aux)``.
+    """
+    step_fn: Callable
+    state_shardings: Any
+    batch_sharding: Any
+    aux: dict
+
+    def __call__(self, state, batch):
+        return self.step_fn(state, batch)
+
+
+def dp_num_workers(mesh, dp_axes: Axes) -> int:
+    axes = (dp_axes,) if isinstance(dp_axes, str) else dp_axes
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _opt_shardings(optimizer, mu_sh, mesh):
+    """OptState(step, mu, nu) sharding tree matching optimizer kind."""
+    from ..optim.optimizers import OptState
+    scalar = NamedSharding(mesh, P())
+    has_nu = type(optimizer).__name__ == "AdamW"
+    return OptState(step=scalar, mu=mu_sh, nu=mu_sh if has_nu else None)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class Fabric:
+    """Aggregation-fabric session bound to one mesh and DP axis set.
+
+    ``mesh=None`` gives a host-local session (virtual workers /
+    single-process experiments); ``num_workers`` then defaults to 1 or
+    may be forced (e.g. for abstract spec construction).
+    """
+
+    def __init__(self, mesh=None, dp_axes: Axes | None = None, *,
+                 rules: GroupRules | None = None,
+                 interpret: bool | None = None,
+                 num_workers: int | None = None):
+        self.mesh = mesh
+        if dp_axes is None:
+            dp_axes = ("data",) if mesh is not None else ()
+        self.dp_axes = ((dp_axes,) if isinstance(dp_axes, str)
+                        else tuple(dp_axes))
+        self.rules = rules or GroupRules()
+        self.interpret = interpret
+        if num_workers is not None:
+            self.num_workers = int(num_workers)
+        elif mesh is not None:
+            self.num_workers = dp_num_workers(mesh, self.dp_axes)
+        else:
+            self.num_workers = 1
+        self._compiled: dict[tuple, CompiledStep] = {}
+
+    # -- context / policy resolution ------------------------------------
+
+    @property
+    def context(self) -> AggregationContext:
+        return AggregationContext(dp_axes=self.dp_axes,
+                                  num_workers=self.num_workers,
+                                  interpret=self.interpret, mesh=self.mesh)
+
+    def resolve(self, params_like: Any, plan: AdmissionPlan,
+                pspecs: Any | None = None) -> Any:
+        """Params (+ optional PartitionSpec tree) -> LeafPolicy pytree."""
+        return resolve_policies(params_like, plan, pspecs=pspecs,
+                                rules=self.rules)
+
+    def groups(self, params_like: Any) -> Any:
+        return assign_groups(params_like, self.rules)
+
+    def group_sizes(self, params_like: Any) -> dict[str, int]:
+        return group_sizes(params_like, self.rules)
+
+    # -- error-feedback state -------------------------------------------
+
+    def init_ef(self, params: Any, policies: Any, dtype=jnp.float32) -> Any:
+        """Global EF tree: ``(W, *shape)`` zeros where EF is on, scalar 0
+        sentinel elsewhere (W = this session's worker count)."""
+        local = init_ef_states(params, policies, dtype)
+        w = self.num_workers
+        return jax.tree.map(
+            lambda e: (jnp.broadcast_to(e, (w,) + e.shape[1:])
+                       if e.ndim > 0 else e), local)
+
+    def ef_specs(self, policies: Any, pspecs: Any) -> Any:
+        """PartitionSpecs for the EF tree (leading dim sharded over DP).
+
+        The single implementation — both the step builder and external
+        spec construction (launch/specs) derive EF shardings here.
+        """
+        pol_leaves, pol_def = jax.tree_util.tree_flatten(
+            policies, is_leaf=_is_policy)
+        spec_leaves = pol_def.flatten_up_to(pspecs)
+        leaves = [
+            P(self.dp_axes, *tuple(sp or P())) if pol.error_feedback else P()
+            for pol, sp in zip(pol_leaves, spec_leaves)]
+        return jax.tree_util.tree_unflatten(pol_def, leaves)
+
+    # -- aggregation ----------------------------------------------------
+
+    def aggregate(self, grads: Any, plan: AdmissionPlan | Any,
+                  ef: Any | None = None, *, pspecs: Any | None = None):
+        """Aggregate a gradient pytree under a plan (or resolved policies).
+
+        Runs inside a shard_map whose manual axes are this session's
+        ``dp_axes`` (the train step's gradient context); with
+        ``dp_axes=()`` it is the host-local/virtual-worker path.  ``plan``
+        may be an :class:`AdmissionPlan` (resolved against ``grads`` with
+        this session's rules) or an already-resolved LeafPolicy pytree.
+        Returns ``(aggregates, new_ef)``.
+        """
+        if isinstance(plan, AdmissionPlan):
+            policies = self.resolve(grads, plan, pspecs=pspecs)
+        else:
+            policies = plan
+        return aggregate_tree(self.context, grads, policies, ef_states=ef)
+
+    # -- step builder ---------------------------------------------------
+
+    def build_step(self, cfg, optimizer, plan: AdmissionPlan,
+                   params_like: Any, *,
+                   with_diagnostics: bool = False,
+                   loss: Callable | None = None,
+                   zero1: bool = True,
+                   grad_accum: int = 1,
+                   donate: bool = True) -> CompiledStep:
+        """Compile one train step for a given admission plan.
+
+        ``params_like``: a concrete or abstract (ShapeDtypeStruct) params
+        tree — used only for structure/paths.  ``grad_accum`` splits the
+        per-device batch into that many sequentially-scanned microbatches
+        (activation memory / grad_accum, one aggregation per step —
+        communication volume unchanged, overlap-friendly).
+        """
+        if self.mesh is None:
+            raise ValueError("Fabric.build_step needs a mesh-bound session "
+                             "(construct Fabric(mesh, dp_axes))")
+        from ..models import loss_fn as model_loss_fn, param_pspecs
+        from ..optim import optimizer_state_pspecs
+        from ..runtime.shardings import sanitize_pspecs
+        from ..core.diagnostics import group_cosines_from_mean
+
+        mesh, dp, w = self.mesh, self.dp_axes, self.num_workers
+        ctx = self.context
+        pspecs = sanitize_pspecs(param_pspecs(cfg), params_like, mesh)
+        policies = self.resolve(params_like, plan, pspecs=pspecs)
+        groups = self.groups(params_like)
+        ef_specs = self.ef_specs(policies, pspecs)
+        lf = loss or (lambda p, b: model_loss_fn(p, cfg, b))
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(), P(dp), ef_specs),
+            out_specs=(P(), P(), ef_specs),
+            axis_names=frozenset(dp), check_vma=False)
+        def _grad_agg(params, batch, ef):
+            if grad_accum > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                        + x.shape[1:]), batch)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, mb):
+                    lacc, gacc = carry
+                    l, g = jax.value_and_grad(lf)(params, mb)
+                    gacc = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                    return (lacc + l, gacc), None
+
+                (lval, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), g0), micro)
+                lval = lval / grad_accum
+                grads = jax.tree.map(lambda x: x / grad_accum, grads)
+            else:
+                lval, grads = jax.value_and_grad(lf)(params, batch)
+            agg, new_ef = aggregate_tree(ctx, grads, policies, ef_states=ef)
+            lval = jax.lax.pmean(lval, dp)
+            return lval, agg, new_ef
+
+        def step_fn(state: TrainState, batch):
+            lval, agg, new_ef = _grad_agg(state.params, batch, state.ef)
+            metrics = {"loss": lval}
+            if with_diagnostics:
+                cos = group_cosines_from_mean(agg, groups)
+                for g, d in sorted(cos.items()):
+                    metrics[f"cos/{g}/gbinary"] = d["gbinary"]
+                    metrics[f"cos/{g}/gternary"] = d["gternary"]
+            gn = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                              for x in jax.tree.leaves(agg)))
+            metrics["agg_norm"] = gn
+            new_params, new_opt = optimizer.apply(state.params, agg, state.opt)
+            return (TrainState(params=new_params, opt=new_opt, ef=new_ef,
+                               step=state.step + 1), metrics)
+
+        # shardings for explicit jit I/O (also consumed by the dry-run)
+        param_sh = _named(mesh, pspecs)
+        opt_specs = optimizer_state_pspecs(pspecs, params_like, dp_axes=dp,
+                                           dp_size=w, zero1=zero1)
+        mu_sh = _named(mesh, opt_specs)
+        state_shardings = TrainState(
+            params=param_sh,
+            opt=_opt_shardings(optimizer, mu_sh, mesh),
+            ef=_named(mesh, ef_specs),
+            step=NamedSharding(mesh, P()))
+        batch_sharding = NamedSharding(mesh, P(dp))
+
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(state_shardings, batch_sharding),
+            out_shardings=(state_shardings, None),
+            donate_argnums=(0,) if donate else ())
+        aux = {"policies": policies, "groups": groups, "num_workers": w,
+               "ef_specs": ef_specs, "pspecs": pspecs}
+        return CompiledStep(jitted, state_shardings, batch_sharding, aux)
+
+    # -- per-plan-signature jit cache -----------------------------------
+
+    def step_for(self, cfg, optimizer, plan: AdmissionPlan,
+                 params_like: Any, *,
+                 with_diagnostics: bool = False,
+                 loss: Callable | None = None,
+                 zero1: bool = True,
+                 grad_accum: int = 1) -> CompiledStep:
+        """Cached :meth:`build_step` — one compiled step per plan
+        signature (the XLA analogue of the controller mode latch).
+
+        The key also covers ``cfg``/``optimizer``/``loss`` (hashable
+        frozen dataclasses / callables), so several Trainers may safely
+        share one session without cross-model cache hits.
+        """
+        key = (plan.signature(), with_diagnostics, zero1, grad_accum,
+               cfg, optimizer, loss)
+        if key not in self._compiled:
+            self._compiled[key] = self.build_step(
+                cfg, optimizer, plan, params_like,
+                with_diagnostics=with_diagnostics, loss=loss, zero1=zero1,
+                grad_accum=grad_accum)
+        return self._compiled[key]
+
+    def clear_cache(self) -> None:
+        self._compiled.clear()
+
+    def __repr__(self) -> str:
+        return (f"Fabric(dp_axes={self.dp_axes}, "
+                f"num_workers={self.num_workers}, "
+                f"mesh={'set' if self.mesh is not None else None})")

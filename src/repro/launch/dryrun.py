@@ -17,7 +17,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..core import AdmissionPlan, AggregationMode, GroupPolicy, Schedule
@@ -63,21 +62,19 @@ def cell_skipped(cfg, cell) -> str | None:
 
 def run_train_cell(cfg, cell, mesh, plan_name: str,
                    grad_accum: int = 1) -> dict:
-    from ..runtime.train import build_train_step
+    from ..fabric import Fabric
     plan = PLANS[plan_name]
-    dp = dp_axes_of(mesh)
+    fabric = Fabric(mesh, dp_axes_of(mesh))
     optimizer = AdamW(peak_lr=1e-4)
-    state = state_specs(cfg, optimizer, plan,
-                        dp_size=int(np.prod([mesh.shape[a] for a in dp])))
+    state = state_specs(cfg, optimizer, plan, dp_size=fabric.num_workers)
     batch = train_batch_specs(cfg, cell)
-    jitted, st_sh, b_sh, aux = build_train_step(
-        cfg, mesh, optimizer, plan, state.params, dp_axes=dp,
-        grad_accum=grad_accum, donate=False)
+    step = fabric.build_step(cfg, optimizer, plan, state.params,
+                             grad_accum=grad_accum, donate=False)
     t0 = time.time()
-    lowered = jitted.lower(state, batch)
+    lowered = step.step_fn.lower(state, batch)
     compiled = lowered.compile()
     return analyze(compiled, mesh, t0, cfg, cell, extra={
-        "plan": plan_name, "num_workers": aux["num_workers"]})
+        "plan": plan_name, "num_workers": step.aux["num_workers"]})
 
 
 def run_decode_cell(cfg, cell, mesh) -> dict:

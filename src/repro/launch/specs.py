@@ -48,19 +48,15 @@ def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
 
 def state_specs(cfg: ModelConfig, optimizer, plan, rules=None, dp_size: int = 1):
     """Abstract TrainState via eval_shape (params + opt + EF sentinels)."""
-    from ..core import init_ef_states, resolve_policies
+    from ..fabric import Fabric, TrainState
     from ..models import init_params, param_pspecs
-    from ..runtime.train import TrainState
 
+    fabric = Fabric(rules=rules, num_workers=dp_size)
     params = jax.eval_shape(
         lambda: init_params(jax.random.PRNGKey(0), cfg))
     opt = jax.eval_shape(lambda: optimizer.init(params))
-    policies = resolve_policies(params, plan, pspecs=param_pspecs(cfg),
-                                rules=rules)
-    ef = jax.eval_shape(lambda: init_ef_states(params, policies))
-    ef = jax.tree.map(
-        lambda e: (sds((dp_size,) + e.shape[1:], e.dtype)
-                   if e.ndim > 0 else e), ef)
+    policies = fabric.resolve(params, plan, pspecs=param_pspecs(cfg))
+    ef = jax.eval_shape(lambda: fabric.init_ef(params, policies))
     return TrainState(params=params, opt=opt, ef=ef,
                       step=sds((), jnp.int32))
 

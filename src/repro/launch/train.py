@@ -52,6 +52,7 @@ def main():
     from ..core import (AdmissionPlan, AggregationMode, Commander,
                         ControlPlane, Schedule, Supervisor)
     from ..data import SyntheticLMStream
+    from ..fabric import Fabric
     from ..optim import AdamW, SgdMomentum
     from ..runtime import Trainer, TrainerConfig
 
@@ -91,8 +92,10 @@ def main():
     else:
         plan = plans[args.plan]
 
+    fabric = Fabric(mesh, dp_axes)
     trainer = Trainer(
         cfg, mesh, optimizer, data, plan=plan, control=control,
+        fabric=fabric,
         tcfg=TrainerConfig(dp_axes=dp_axes,
                            checkpoint_interval=args.ckpt_interval),
         ckpt_dir=args.ckpt_dir, seed=args.seed)

@@ -6,67 +6,46 @@ The train step is the integration point of the whole system (DESIGN.md §4):
     manual over the DP axes (``('pod','data')``), auto over ``'model'`` —
     so per-worker gradients are visible to the aggregation layer exactly
     like per-worker payloads are visible to the paper's controller;
-  * each bucket is aggregated under its admitted mode
-    (core.aggregate_gradients): FP32 buckets via psum, low-bit buckets via
-    int8 vote psum or the packed all_to_all controller schedule;
+  * each bucket is aggregated under its admitted mode through the
+    :class:`repro.fabric.Fabric` session: FP32 buckets via psum, low-bit
+    buckets via whichever registered schedule backend the plan names;
   * the optimizer runs *outside* the shard_map in auto-SPMD land, so
     ZeRO-1 optimizer-state sharding is pure GSPMD;
-  * one compiled step per AdmissionPlan signature, cached — the XLA
-    analogue of the paper's controller mode latch.
+  * one compiled step per AdmissionPlan signature, cached inside the
+    Fabric — the XLA analogue of the paper's controller mode latch.
 
 The Trainer owns the host-side control loop: warm-up/calibration, the
 Predictor/Commander/Supervisor control plane, checkpointing, failure
-recovery, and the straggler watchdog.
+recovery, and the straggler watchdog.  Step compilation and aggregation
+policy live in the Fabric session it drives.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import logging
-import time
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import (AdmissionPlan, ControlPlane, GroupRules,
-                    aggregate_gradients, assign_groups, cosines_to_host,
-                    group_cosines_from_mean, group_sizes, init_ef_states,
-                    plan_traffic_ratio, resolve_policies)
+                    plan_traffic_ratio)
 from ..checkpoint import CheckpointManager
-from ..models import ModelConfig, init_params, loss_fn as model_loss_fn, \
-    param_pspecs
-from ..optim import Optimizer, optimizer_state_pspecs
+from ..fabric import CompiledStep, Fabric, TrainState, dp_num_workers
+from ..fabric.session import _named
+from ..models import ModelConfig, init_params, param_pspecs
+from ..optim import Optimizer
 from .fault import (FailureInjector, SimulatedFailure, StepTimer,
                     StragglerWatchdog)
-from .shardings import sanitize_pspecs
 
 log = logging.getLogger("repro.train")
 
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class TrainState:
-    params: Any
-    opt: Any
-    ef: Any                    # error-feedback residuals (sentinel tree)
-    step: jax.Array
-
-
-def dp_num_workers(mesh, dp_axes) -> int:
-    return int(np.prod([mesh.shape[a] for a in dp_axes]))
-
-
-def _named(mesh, spec_tree):
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s if s is not None else P()),
-        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+__all__ = ["TrainState", "Trainer", "TrainerConfig", "build_train_step",
+           "dp_num_workers"]
 
 
 # ---------------------------------------------------------------------------
-# step builder
+# step builder (legacy shim)
 # ---------------------------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, mesh, optimizer: Optimizer,
@@ -76,111 +55,18 @@ def build_train_step(cfg: ModelConfig, mesh, optimizer: Optimizer,
                      loss: Callable | None = None,
                      zero1: bool = True,
                      grad_accum: int = 1,
-                     donate: bool = True):
-    """Compile one train step for a given admission plan.
+                     donate: bool = True) -> CompiledStep:
+    """Deprecated free-function shim — use ``Fabric(...).build_step``.
 
-    ``params_like``: a concrete or abstract (ShapeDtypeStruct) params tree —
-    used only for structure/paths.  ``grad_accum`` splits the per-device
-    batch into that many sequentially-scanned microbatches (activation
-    memory / grad_accum, one aggregation per step — communication volume
-    unchanged, overlap-friendly).  Returns (jitted_step, state_shardings,
-    batch_shardings, aux).
+    Constructs a throwaway session and compiles one step; returns the
+    legacy 4-tuple-compatible :class:`CompiledStep`
+    ``(jitted, state_shardings, batch_sharding, aux)``.
     """
-    rules = rules or GroupRules()
-    dp = tuple(dp_axes)
-    w = dp_num_workers(mesh, dp)
-    pspecs = sanitize_pspecs(param_pspecs(cfg), params_like, mesh)
-    policies = resolve_policies(params_like, plan, pspecs=pspecs, rules=rules)
-    groups = assign_groups(params_like, rules)
-    lf = loss or (lambda p, b: model_loss_fn(p, cfg, b))
-
-    pol_leaves, pol_def = jax.tree_util.tree_flatten(
-        policies, is_leaf=lambda x: hasattr(x, "mode"))
-    spec_leaves = pol_def.flatten_up_to(pspecs)
-    ef_spec_leaves = [
-        P(dp, *tuple(sp or P())) if pol.error_feedback else P()
-        for pol, sp in zip(pol_leaves, spec_leaves)]
-    ef_specs = jax.tree_util.tree_unflatten(pol_def, ef_spec_leaves)
-
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(), P(dp), ef_specs),
-        out_specs=(P(), P(), ef_specs),
-        axis_names=frozenset(dp), check_vma=False)
-    def _grad_agg(params, batch, ef):
-        if grad_accum > 1:
-            micro = jax.tree.map(
-                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
-                                    + x.shape[1:]), batch)
-            g0 = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-            def body(carry, mb):
-                lacc, gacc = carry
-                l, g = jax.value_and_grad(lf)(params, mb)
-                gacc = jax.tree.map(
-                    lambda a, x: a + x.astype(jnp.float32), gacc, g)
-                return (lacc + l, gacc), None
-
-            (lval, grads), _ = jax.lax.scan(
-                body, (jnp.zeros((), jnp.float32), g0), micro)
-            lval = lval / grad_accum
-            grads = jax.tree.map(lambda x: x / grad_accum, grads)
-        else:
-            lval, grads = jax.value_and_grad(lf)(params, batch)
-        agg, new_ef = aggregate_gradients(grads, policies, dp, w,
-                                          ef_states=ef)
-        lval = jax.lax.pmean(lval, dp)
-        return lval, agg, new_ef
-
-    def step_fn(state: TrainState, batch):
-        lval, agg, new_ef = _grad_agg(state.params, batch, state.ef)
-        metrics = {"loss": lval}
-        if with_diagnostics:
-            cos = group_cosines_from_mean(agg, groups)
-            for g, d in sorted(cos.items()):
-                metrics[f"cos/{g}/gbinary"] = d["gbinary"]
-                metrics[f"cos/{g}/gternary"] = d["gternary"]
-        gn = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
-                          for x in jax.tree.leaves(agg)))
-        metrics["agg_norm"] = gn
-        new_params, new_opt = optimizer.apply(state.params, agg, state.opt)
-        return (TrainState(params=new_params, opt=new_opt, ef=new_ef,
-                           step=state.step + 1), metrics)
-
-    # shardings for explicit jit I/O (also consumed by the dry-run)
-    param_sh = _named(mesh, pspecs)
-    opt_specs = optimizer_state_pspecs(pspecs, params_like, dp_axes=dp,
-                                       dp_size=w, zero1=zero1)
-    mu_sh = _named(mesh, opt_specs)
-    state_shardings = TrainState(
-        params=param_sh,
-        opt=_opt_shardings(optimizer, mu_sh, mesh),
-        ef=_named(mesh, ef_specs),
-        step=NamedSharding(mesh, P()))
-    batch_sharding = NamedSharding(mesh, P(dp))
-
-    jitted = jax.jit(
-        step_fn,
-        in_shardings=(state_shardings, batch_sharding),
-        out_shardings=(state_shardings, None),
-        donate_argnums=(0,) if donate else ())
-    aux = {"policies": policies, "groups": groups, "num_workers": w,
-           "ef_specs": ef_specs, "pspecs": pspecs}
-    return jitted, state_shardings, batch_sharding, aux
-
-
-def _is_abstract(tree) -> bool:
-    leaves = jax.tree.leaves(tree)
-    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
-
-
-def _opt_shardings(optimizer: Optimizer, mu_sh, mesh):
-    """OptState(step, mu, nu) sharding tree matching optimizer kind."""
-    from ..optim.optimizers import OptState
-    scalar = NamedSharding(mesh, P())
-    has_nu = type(optimizer).__name__ == "AdamW"
-    return OptState(step=scalar, mu=mu_sh, nu=mu_sh if has_nu else None)
+    fabric = Fabric(mesh, dp_axes, rules=rules)
+    return fabric.build_step(cfg, optimizer, plan, params_like,
+                             with_diagnostics=with_diagnostics, loss=loss,
+                             zero1=zero1, grad_accum=grad_accum,
+                             donate=donate)
 
 
 # ---------------------------------------------------------------------------
@@ -199,7 +85,13 @@ class TrainerConfig:
 
 
 class Trainer:
-    """Host control loop with admission control and fault tolerance."""
+    """Host control loop with admission control and fault tolerance.
+
+    Runs on a :class:`repro.fabric.Fabric` session — pass one via
+    ``fabric=`` to share schedule backends / compiled-step caches across
+    components, or let the Trainer construct its own from ``mesh`` and
+    ``tcfg.dp_axes``.
+    """
 
     def __init__(self, cfg: ModelConfig, mesh, optimizer: Optimizer,
                  data: Iterator[dict], *,
@@ -207,13 +99,31 @@ class Trainer:
                  control: ControlPlane | None = None,
                  plan: AdmissionPlan | None = None,
                  rules: GroupRules | None = None,
+                 fabric: Fabric | None = None,
                  ckpt_dir: str | None = None,
                  failure_injector: FailureInjector | None = None,
                  loss: Callable | None = None,
                  seed: int = 0):
-        self.cfg, self.mesh, self.optimizer = cfg, mesh, optimizer
+        if fabric is None:
+            fabric = Fabric(mesh, tcfg.dp_axes, rules=rules)
+        else:
+            # an explicit fabric owns mesh + dp_axes + rules; conflicting
+            # direct arguments would otherwise be silently ignored
+            if mesh is not None and mesh != fabric.mesh:
+                raise ValueError("mesh argument conflicts with fabric.mesh; "
+                                 "pass one or the other")
+            if tuple(tcfg.dp_axes) != fabric.dp_axes:
+                raise ValueError(
+                    f"tcfg.dp_axes {tuple(tcfg.dp_axes)} conflicts with "
+                    f"fabric.dp_axes {fabric.dp_axes}; construct the Fabric "
+                    f"with these axes")
+            if rules is not None and rules is not fabric.rules:
+                raise ValueError("rules argument conflicts with fabric.rules"
+                                 "; construct the Fabric with these rules")
+        self.fabric = fabric
+        self.cfg, self.mesh, self.optimizer = cfg, fabric.mesh, optimizer
         self.tcfg = tcfg
-        self.rules = rules or GroupRules()
+        self.rules = fabric.rules
         self.control = control
         self.static_plan = plan
         self.data = data
@@ -225,7 +135,6 @@ class Trainer:
                                        interval=tcfg.checkpoint_interval,
                                        keep=tcfg.checkpoint_keep)
                      if ckpt_dir else None)
-        self._compiled: dict[str, Any] = {}
         self.state: TrainState | None = None
         self.history: list[dict] = []
         self.restarts = 0
@@ -241,17 +150,11 @@ class Trainer:
         params = jax.device_put(params, _named(self.mesh, pspecs))
         opt = self.optimizer.init(params)
         plan = self._current_plan()
-        policies = resolve_policies(params, plan, pspecs=pspecs,
-                                    rules=self.rules)
-        ef = init_ef_states(params, policies)
-        # EF leaves need the leading-DP dim
-        w = dp_num_workers(self.mesh, self.tcfg.dp_axes)
-        ef = jax.tree.map(
-            lambda e: (jnp.broadcast_to(e, (w,) + e.shape[1:])
-                       if e.ndim > 0 else e), ef)
+        policies = self.fabric.resolve(params, plan, pspecs=pspecs)
+        ef = self.fabric.init_ef(params, policies)
         self.state = TrainState(params=params, opt=opt, ef=ef,
                                 step=jnp.zeros((), jnp.int32))
-        self._sizes = group_sizes(params, self.rules)
+        self._sizes = self.fabric.group_sizes(params)
         return self.state
 
     def _current_plan(self) -> AdmissionPlan:
@@ -260,15 +163,11 @@ class Trainer:
         return self.static_plan or AdmissionPlan.fp32_all()
 
     def _get_step(self, plan: AdmissionPlan, diagnostics: bool):
-        key = (plan.signature(), diagnostics)
-        if key not in self._compiled:
-            jitted, st_sh, b_sh, aux = build_train_step(
-                self.cfg, self.mesh, self.optimizer, plan,
-                self.state.params, dp_axes=self.tcfg.dp_axes,
-                rules=self.rules, with_diagnostics=diagnostics,
-                loss=self.loss, zero1=self.tcfg.zero1)
-            self._compiled[key] = (jitted, b_sh)
-        return self._compiled[key]
+        step = self.fabric.step_for(
+            self.cfg, self.optimizer, plan, self.state.params,
+            with_diagnostics=diagnostics, loss=self.loss,
+            zero1=self.tcfg.zero1)
+        return step, step.batch_sharding
 
     # -- loop -----------------------------------------------------------
     def run(self, num_steps: int) -> list[dict]:
@@ -316,7 +215,6 @@ class Trainer:
             _, self.state, _ = restored
 
     def _run_until(self, num_steps: int, it: Iterator[dict]) -> int:
-        dp = self.tcfg.dp_axes
         while int(self.state.step) < num_steps:
             step = int(self.state.step)
             if self.failure_injector is not None:

@@ -14,6 +14,9 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dependency (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro import kernels as K
