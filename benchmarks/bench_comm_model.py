@@ -9,9 +9,19 @@ communication is the FP32 path, the sign is taken after the mean).
 Paths are named by their *registered schedule backend* — the baselines
 resolve through the same ``repro.fabric`` registry the production
 schedules use, so a newly registered collective shows up here by name.
+
+The ``fused`` rows add the per-launch term: the same GPT-2 XL payload
+split into its per-leaf tensors (one collective each) vs fused into
+32 MiB buckets (one collective per bucket) — identical bytes, O(leaves)
+vs O(buckets) launch latencies.
 """
-from repro.core.modes import AggregationMode
+import jax
+
+from repro.core.buckets import (AdmissionPlan, DEFAULT_BUCKET_BYTES,
+                                plan_buckets, resolve_policies)
+from repro.core.modes import AggregationMode, Schedule
 from repro.core.traffic import (GPT2_XL_PARAMS, IciModel, modeled_comm_time,
+                                modeled_layout_comm_time,
                                 wire_bytes_per_device)
 from repro.fabric import get_schedule
 
@@ -24,6 +34,39 @@ PATHS = [
     ("majority_sign_sgd(sw)", AggregationMode.G_BINARY, "majority_sign_sgd"),
     ("sign_of_mean(ref)", AggregationMode.FP32, "sign_of_mean"),
 ]
+
+
+def _gpt2_xl_leaves():
+    """GPT-2 XL-shaped abstract param census (48 layers, d=1600)."""
+    d, layers, sds = 1600, 48, jax.ShapeDtypeStruct
+    f32 = "float32"
+    tree = {"wte": sds((50257, d), f32), "wpe": sds((1024, d), f32)}
+    for i in range(layers):
+        tree[f"h{i:02d}"] = {
+            "qkv": sds((d, 3 * d), f32), "proj": sds((d, d), f32),
+            "fc_in": sds((d, 4 * d), f32), "fc_out": sds((4 * d, d), f32),
+            "ln1_scale": sds((d,), f32), "ln1_bias": sds((d,), f32),
+            "ln2_scale": sds((d,), f32), "ln2_bias": sds((d,), f32),
+        }
+    return tree
+
+
+def _fused_rows(ici):
+    params = _gpt2_xl_leaves()
+    plan = AdmissionPlan.lowbit_all(AggregationMode.G_BINARY,
+                                    schedule=Schedule.PACKED_A2A)
+    policies = resolve_policies(params, plan)
+    per_leaf = plan_buckets(params, policies, bucket_bytes=1)
+    fused = plan_buckets(params, policies,
+                         bucket_bytes=DEFAULT_BUCKET_BYTES)
+    t_leaf = modeled_layout_comm_time(per_leaf, W, ici)
+    t_fused = modeled_layout_comm_time(fused, W, ici)
+    return [
+        ("comm_model/gpt2xl_tree/per_leaf", t_leaf * 1e6,
+         f"launches={per_leaf.num_launches}"),
+        ("comm_model/gpt2xl_tree/fused_32MiB", t_fused * 1e6,
+         f"launches={fused.num_launches} speedup={t_leaf/t_fused:.1f}x"),
+    ]
 
 
 def rows():
@@ -43,4 +86,5 @@ def rows():
             base = t
         out.append((f"comm_model/gpt2xl/{name}", t * 1e6,
                     f"wire={b/2**30:.2f}GiB speedup={base/t:.1f}x"))
+    out.extend(_fused_rows(ici))
     return out

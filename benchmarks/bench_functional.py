@@ -6,6 +6,7 @@ transformation-aware oracle (identity: byte-exact; low-bit: the Section 2
 reduction).  Reported value is the end-to-end pipeline latency on the
 functional path; `derived` records the exact-match verdicts.
 """
+import functools
 import time
 
 import jax
@@ -40,6 +41,54 @@ def _fabric_session_row():
           and np.allclose(np.asarray(agg["head"]["w"]),
                           np.asarray(grads["head"]["w"])))
     return ("functional/fabric_session_mixed_plan", t_us, f"oracle_exact={ok}")
+
+
+def _fused_bucketing_rows():
+    """Bucketed vs per-leaf aggregation on the quickstart model.
+
+    Plans the bucket layout over the real quickstart param tree
+    (qwen3_0p6b smoke) under the paper's recovered operating point, and
+    reports the collective-launch reduction — O(leaves) per-leaf vs
+    O(buckets) fused — plus measured host-local dispatch latency and a
+    bit-for-bit cross-check of the two paths.
+    """
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config("qwen3_0p6b", smoke=True)
+    params = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY)
+    fabric = Fabric()                        # host-local session
+    layout = fabric.layout_for(params, plan)
+    n_leaves, n_launches = layout.num_leaves, layout.num_launches
+
+    # concrete grads with the same structure: time both paths end to end
+    rng = np.random.RandomState(3)
+    grads = jax.tree.map(
+        lambda s: jnp.asarray(rng.randn(*s.shape), jnp.float32), params)
+
+    def timed(fused):
+        agg, _ = fabric.aggregate(grads, plan, fused=fused)  # warm caches
+        jax.block_until_ready(agg)
+        t0 = time.perf_counter()
+        agg, _ = fabric.aggregate(grads, plan, fused=fused)
+        jax.block_until_ready(agg)
+        return agg, (time.perf_counter() - t0) * 1e6
+
+    per_leaf, t_leaf = timed(False)
+    fused, t_fused = timed(True)
+    exact = all(jax.tree.leaves(jax.tree.map(
+        lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+        per_leaf, fused)))
+    return [
+        ("functional/fused_launch_count", 0.0,
+         f"leaves={n_leaves} launches={n_launches} "
+         f"buckets={len(layout.buckets)}"),
+        ("functional/per_leaf_aggregate", t_leaf, f"launches={n_leaves}"),
+        ("functional/fused_aggregate", t_fused,
+         f"launches={n_launches} bitwise_equal={exact}"),
+    ]
 
 
 def rows():
@@ -77,4 +126,5 @@ def rows():
         ("functional/gbinary_pipeline", t_bin, f"oracle_exact={bin_ok}"),
         ("functional/gternary_pipeline", t_bin, f"oracle_exact={ter_ok}"),
         _fabric_session_row(),
+        *_fused_bucketing_rows(),
     ]

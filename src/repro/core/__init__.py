@@ -16,15 +16,19 @@ from .modes import (AggregationMode, Schedule, bits_per_element,
 from .lowbit import (LeafPolicy, aggregate_leaf, fp32_allreduce,
                      lowbit_packed_a2a, lowbit_vote_psum, majority_sign_sgd,
                      sign_of_mean)
-from .buckets import (AdmissionPlan, GroupPolicy, GroupRules, assign_groups,
-                      group_sizes, path_name, resolve_policies)
+from .buckets import (AdmissionPlan, Bucket, BucketGate, BucketKey,
+                      BucketLayout, BucketSlot, DEFAULT_BUCKET_BYTES,
+                      GroupPolicy, GroupRules, UnfusedLeaf, assign_groups,
+                      group_sizes, path_name, plan_buckets,
+                      resolve_policies)
 from .aggregate import aggregate_gradients, init_ef_states, make_policy_tree
 from .admission import (Commander, ControlPlane, CusumGuard, Predictor,
                         Supervisor)
 from .diagnostics import (cosines_to_host, group_cosines_from_mean,
                           group_cosines_from_workers)
-from .traffic import (IciModel, modeled_comm_time, payload_bytes,
-                      plan_traffic_ratio, wire_bytes_per_device)
+from .traffic import (IciModel, modeled_comm_time, modeled_layout_comm_time,
+                      payload_bytes, plan_traffic_ratio,
+                      wire_bytes_per_device)
 from .exposure import ExposureModel, TpuDatapathModel, envelope_sweep
 
 __all__ = [
@@ -32,12 +36,14 @@ __all__ = [
     "traffic_ratio", "wire_schedule",
     "LeafPolicy", "aggregate_leaf", "fp32_allreduce", "lowbit_packed_a2a",
     "lowbit_vote_psum", "majority_sign_sgd", "sign_of_mean",
-    "AdmissionPlan", "GroupPolicy", "GroupRules", "assign_groups",
-    "group_sizes", "path_name", "resolve_policies",
+    "AdmissionPlan", "Bucket", "BucketGate", "BucketKey", "BucketLayout",
+    "BucketSlot", "DEFAULT_BUCKET_BYTES", "GroupPolicy", "GroupRules",
+    "UnfusedLeaf", "assign_groups", "group_sizes", "path_name",
+    "plan_buckets", "resolve_policies",
     "aggregate_gradients", "init_ef_states", "make_policy_tree",
     "Commander", "ControlPlane", "CusumGuard", "Predictor", "Supervisor",
     "cosines_to_host", "group_cosines_from_mean", "group_cosines_from_workers",
-    "IciModel", "modeled_comm_time", "payload_bytes", "plan_traffic_ratio",
-    "wire_bytes_per_device",
+    "IciModel", "modeled_comm_time", "modeled_layout_comm_time",
+    "payload_bytes", "plan_traffic_ratio", "wire_bytes_per_device",
     "ExposureModel", "TpuDatapathModel", "envelope_sweep",
 ]

@@ -1,4 +1,4 @@
-"""Gradient bucket manager: parameter groups -> admitted aggregation policies.
+"""Gradient bucket manager: groups, admission policies, and bucket layouts.
 
 The paper's controller operates on *buckets* (Section 5.2 replays 32 MiB
 gradient buckets) and its admission decisions are *layer-group* granular
@@ -6,23 +6,34 @@ gradient buckets) and its admission decisions are *layer-group* granular
 
   parameter tree --(GroupRules)--> named groups --(AdmissionPlan)--> modes
                  --(resolve_policies)--> per-leaf LeafPolicy pytree
+                 --(plan_buckets)------> BucketLayout (fused flat buckets)
 
 Groups also drive the traffic accounting and the cosine-alignment
 diagnostics, so the three views (admission, traffic, diagnostics) always
 agree on what "the head" or "the backbone" is.
+
+The :class:`BucketLayout` planner is the fusion seam: compatible leaves
+(same mode / wire schedule / error-feedback flag / gate phase / TP spec /
+dtype) are concatenated into fixed-budget flat buckets (default 32 MiB,
+matching the paper's bucket size) so the fabric runs **one** collective
+per bucket instead of one per leaf.  The layout is a pure function of
+(leaf order, shapes, dtypes, policies, bucket_bytes), so it is stable
+across steps and safe to cache alongside a compiled train step.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Iterator, Mapping, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .lowbit import LeafPolicy
 from .modes import (AggregationMode, DEFAULT_SCHEDULE, Schedule,
-                    schedule_name)
+                    schedule_name, wire_schedule)
 
 
 def path_name(key_path) -> str:
@@ -179,3 +190,198 @@ def resolve_policies(params: Any, plan: AdmissionPlan,
             mode=gp.mode, schedule=gp.resolved_schedule(), model_spec=spec,
             error_feedback=gp.error_feedback))
     return jax.tree_util.tree_unflatten(treedef, policies)
+
+
+# ---------------------------------------------------------------------------
+# bucket layout planner (paper Section 5.2: fixed-size gradient buckets)
+# ---------------------------------------------------------------------------
+
+#: Default flat-bucket payload budget; the paper's controller replays
+#: 32 MiB gradient buckets (Section 5.2).
+DEFAULT_BUCKET_BYTES = 32 * 2 ** 20
+
+_is_policy = lambda x: hasattr(x, "mode") and hasattr(x, "schedule")
+
+
+def _trivial_spec(spec) -> bool:
+    """True when a model PartitionSpec implies a fully local leaf."""
+    return spec is None or all(a is None for a in spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Fusion-compatibility key: leaves may share a bucket iff equal.
+
+    ``schedule`` is the *wire* schedule name (post
+    :func:`~repro.core.modes.wire_schedule` normalization), so e.g. an
+    FP32 leaf nominally planned on ``packed_a2a`` fuses with plain
+    ``psum`` leaves — exactly the collective the per-leaf path would
+    have launched.  ``model_spec`` is None for fully local leaves;
+    TP-sharded leaves keep their spec (and are never fused).
+    """
+    mode: AggregationMode
+    schedule: str
+    error_feedback: bool
+    gate_phase: int
+    model_spec: Any
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSlot:
+    """One leaf's placement inside a bucket's flat payload."""
+    leaf: int                   # index into the flattened gradient tree
+    name: str                   # '/'-joined tree path (debugging / reports)
+    shape: tuple
+    size: int                   # element count
+    offset: int                 # start offset in the bucket's flat payload
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketGate:
+    """Per-bucket ternary zero gate, as (size, phase) leaf segments.
+
+    The 2-of-3 gate is defined over each *leaf's own* flat index (paper
+    Section 2), so the bucket gate is the concatenation of per-leaf
+    patterns — this is what keeps the fused ternary path bit-identical
+    to per-leaf aggregation.  Backends pick the representation:
+    :meth:`vector` builds it on device (iota + mod — no multi-MB host
+    constant in the compiled step) for elementwise schedules;
+    :meth:`mask` materializes the host boolean array the packed-word
+    schedules need for gate-word packing (1 bit/element once packed).
+    """
+    segments: tuple             # ((n_elements, phase), ...) per leaf
+
+    def mask(self) -> np.ndarray:
+        return np.concatenate(
+            [(((np.arange(n) + p) % 3) != 2) for n, p in self.segments])
+
+    def vector(self, dtype) -> Any:
+        parts = [(((jnp.arange(n) + p) % 3) != 2).astype(dtype)
+                 for n, p in self.segments]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A group of compatible leaves aggregated by one fused collective."""
+    key: BucketKey
+    slots: tuple
+    size: int                   # total elements in the flat payload
+
+    def gate(self) -> BucketGate | None:
+        """The bucket's ternary gate, or None for binary/FP32 buckets."""
+        if AggregationMode(self.key.mode) != AggregationMode.G_TERNARY:
+            return None
+        phase = self.key.gate_phase
+        return BucketGate(segments=tuple((s.size, phase)
+                                         for s in self.slots))
+
+
+@dataclasses.dataclass(frozen=True)
+class UnfusedLeaf:
+    """A leaf aggregated per-leaf (TP-sharded or non-fusable backend)."""
+    leaf: int
+    name: str
+    key: BucketKey
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Leaf -> (bucket, offset) assignment for one (tree, policies) pair.
+
+    Deterministic in its inputs (leaf order, shapes, dtypes, policies,
+    ``bucket_bytes``), hence stable across steps: a layout computed once
+    at trace time is valid for every step compiled from the same plan.
+    """
+    buckets: tuple              # tuple[Bucket]
+    unfused: tuple              # tuple[UnfusedLeaf]
+    num_leaves: int
+    bucket_bytes: int
+
+    @property
+    def num_launches(self) -> int:
+        """Collectives per aggregation pass: O(buckets), not O(leaves)."""
+        return len(self.buckets) + len(self.unfused)
+
+    def launches(self) -> Iterator[tuple]:
+        """Yield ``(BucketKey, n_elements)`` per collective launch."""
+        for b in self.buckets:
+            yield b.key, b.size
+        for u in self.unfused:
+            yield u.key, u.size
+
+
+def leaf_bucket_key(policy, dtype) -> BucketKey:
+    """Compatibility key for one leaf under its resolved policy."""
+    mode = AggregationMode(policy.mode)
+    wire = schedule_name(wire_schedule(policy.mode, policy.schedule))
+    spec = getattr(policy, "model_spec", None)
+    # only G-Ternary reads the gate phase; normalizing it for every
+    # other mode keeps otherwise-compatible leaves in the same bucket
+    phase = (int(getattr(policy, "gate_phase", 0))
+             if mode == AggregationMode.G_TERNARY else 0)
+    return BucketKey(
+        mode=mode, schedule=wire,
+        error_feedback=bool(policy.error_feedback),
+        gate_phase=phase,
+        model_spec=None if _trivial_spec(spec) else spec,
+        dtype=str(np.dtype(dtype)))
+
+
+def plan_buckets(params_like: Any, policies: Any, *,
+                 bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 fusable: Callable[[str], bool] | None = None) -> BucketLayout:
+    """Group gradient leaves into fixed-budget flat buckets.
+
+    ``params_like`` may hold concrete arrays or abstract
+    ShapeDtypeStructs — only shapes/dtypes are read.  ``fusable`` is an
+    optional predicate on the wire-schedule name (the Fabric session
+    passes one that checks the backend's ``fusable`` flag); leaves whose
+    schedule fails it, or that are TP-sharded (non-trivial
+    ``model_spec``), stay on the per-leaf path as :class:`UnfusedLeaf`.
+
+    Greedy first-fit in leaf order: a bucket closes when adding the next
+    leaf would exceed ``bucket_bytes``; a single leaf larger than the
+    budget gets a bucket of its own.  Pass ``bucket_bytes=1`` to obtain
+    the degenerate one-leaf-per-bucket layout (the per-leaf baseline for
+    launch accounting).
+    """
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params_like)
+    pol_leaves = jax.tree_util.tree_flatten(policies, is_leaf=_is_policy)[0]
+    assert len(pol_leaves) == len(leaves), (
+        f"policy tree mismatch: {len(pol_leaves)} policies vs "
+        f"{len(leaves)} leaves")
+
+    open_buckets: dict[BucketKey, list] = {}     # key -> [slots, elems]
+    done: list[Bucket] = []
+    unfused: list[UnfusedLeaf] = []
+
+    def close(key):
+        slots, elems = open_buckets.pop(key)
+        done.append(Bucket(key=key, slots=tuple(slots), size=elems))
+
+    for i, ((kp, leaf), pol) in enumerate(zip(leaves, pol_leaves)):
+        name = path_name(kp)
+        shape = tuple(leaf.shape)
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        key = leaf_bucket_key(pol, leaf.dtype)
+        ok = key.model_spec is None and (fusable is None
+                                         or fusable(key.schedule))
+        if not ok:
+            unfused.append(UnfusedLeaf(leaf=i, name=name, key=key, size=size))
+            continue
+        budget = max(1, bucket_bytes // np.dtype(leaf.dtype).itemsize)
+        if key in open_buckets and open_buckets[key][1] + size > budget:
+            close(key)
+        slots, elems = open_buckets.setdefault(key, [[], 0])
+        slots.append(BucketSlot(leaf=i, name=name, shape=shape, size=size,
+                                offset=open_buckets[key][1]))
+        open_buckets[key][1] += size
+    for key in list(open_buckets):
+        close(key)
+    # deterministic order: by first leaf index, independent of dict history
+    done.sort(key=lambda b: b.slots[0].leaf)
+    return BucketLayout(buckets=tuple(done), unfused=tuple(unfused),
+                        num_leaves=len(leaves), bucket_bytes=bucket_bytes)

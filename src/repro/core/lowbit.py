@@ -17,7 +17,9 @@ Semantics (paper Section 2, identical across schedules):
 Two schedules implement the same semantics with different bytes-on-wire:
 
   * ``vote_psum``   — int8 sign votes, one ``psum`` over the DP axes.
-                      ~2N bytes/device (vs ~8N for FP32 ring all-reduce).
+                      ~2N bytes/device modeled (vs ~8N for FP32 ring
+                      all-reduce); the XLA realization widens the psum
+                      operand to int32 so the margin stays exact at any W.
   * ``packed_a2a``  — the controller schedule.  Workers pack sign bits
                       (``sign_pack`` kernel, N/8 bytes), ``all_to_all``
                       routes each packed shard to the device that "owns"
@@ -100,20 +102,32 @@ def _ef_update(g_eff: jax.Array, ef: jax.Array | None):
 
 def lowbit_vote_psum(g: jax.Array, dp_axes: Axes, num_workers: int, *,
                      ternary: bool = False, gate_phase: int = 0,
-                     ef: jax.Array | None = None):
+                     ef: jax.Array | None = None,
+                     gate: jax.Array | None = None):
     """Sign votes as int8, one psum over DP, majority (+ optional gate).
 
     Works on arbitrarily sharded leaves (pure elementwise + psum), so it is
     the default schedule for tensor-parallel-sharded parameters.
 
+    ``gate`` optionally overrides the flat-index 2-of-3 gate with an
+    explicit {0, 1} keep vector — the fused bucket path passes the
+    concatenation of per-leaf gates here.
+
     Returns ``(u, new_ef)`` with ``u`` in {-1, 0, +1} (dtype of ``g``).
     """
     g_eff, ef = _ef_inject(g, ef)
     votes = jnp.where(g_eff > 0, jnp.int8(1), jnp.int8(-1))
-    margin = jax.lax.psum(votes, dp_axes)           # int8; a_i = 2c - W
+    # The *accumulation* must be wider than the 1-byte vote: the margin
+    # a_i = 2c - W spans [-W, W], which wraps int8 for W >= 128.  Note
+    # the XLA realization therefore ships the widened int32 operand; the
+    # schedule's wire-byte model keeps counting the paper's logical
+    # 1-byte vote payload (what a controller-side popcount would move) —
+    # see VotePsumBackend.wire_bytes_per_device.
+    margin = jax.lax.psum(votes.astype(jnp.int32), dp_axes)
     u = jnp.sign(margin.astype(jnp.float32))
     if ternary:
-        u = u * _flat_index_gate(g.shape, gate_phase)
+        u = u * (_flat_index_gate(g.shape, gate_phase) if gate is None
+                 else gate.astype(u.dtype))
     return u.astype(g.dtype), _ef_update(g_eff, ef)
 
 
@@ -123,8 +137,14 @@ def lowbit_vote_psum(g: jax.Array, dp_axes: Axes, num_workers: int, *,
 
 def _packed_a2a_local(g: jax.Array, dp_axes: Axes, num_workers: int, *,
                       ternary: bool, gate_phase: int,
-                      ef: jax.Array | None, interpret: bool | None):
-    """Packed aggregation over DP for a *fully local* array."""
+                      ef: jax.Array | None, interpret: bool | None,
+                      gate_mask=None):
+    """Packed aggregation over DP for a *fully local* array.
+
+    ``gate_mask`` (host-side boolean (N,) array) overrides the uniform
+    flat-index 2-of-3 gate with an arbitrary keep pattern; the fused
+    bucket path uses it to carry the concatenation of per-leaf gates.
+    """
     w = num_workers
     n = g.size
     g_eff, ef = _ef_inject(g, ef)
@@ -144,10 +164,14 @@ def _packed_a2a_local(g: jax.Array, dp_axes: Axes, num_workers: int, *,
     if ternary:
         # gate indexed by this shard's element range within the plane
         my = jax.lax.axis_index(dp_axes)
-        base = (my * rw * K.PACK * K.LANE + gate_phase) % 3
-        gates = jnp.stack([kref.ternary_gate_words(rw * K.PACK, phase=p)
-                           for p in range(3)])
-        gate = gates[base]
+        if gate_mask is not None:
+            full = kref.gate_words_from_mask(gate_mask, pad_words=r + pad_r)
+            gate = jax.lax.dynamic_slice_in_dim(full, my * rw, rw, axis=0)
+        else:
+            base = (my * rw * K.PACK * K.LANE + gate_phase) % 3
+            gates = jnp.stack([kref.ternary_gate_words(rw * K.PACK, phase=p)
+                               for p in range(3)])
+            gate = gates[base]
     else:
         gate = jnp.full((rw, K.LANE), 0xFFFFFFFF, jnp.uint32)
     sw, mw = K.majority_decode(counts, num_workers=w, gate_words=gate,
@@ -164,17 +188,21 @@ def _packed_a2a_local(g: jax.Array, dp_axes: Axes, num_workers: int, *,
 def lowbit_packed_a2a(g: jax.Array, dp_axes: Axes, num_workers: int, *,
                       model_spec: P | None = None, ternary: bool = False,
                       gate_phase: int = 0, ef: jax.Array | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, gate_mask=None):
     """Controller-schedule aggregation.
 
     If the leaf is sharded over auto (tensor-parallel) mesh axes,
     ``model_spec`` must give its PartitionSpec; an inner ``shard_map`` makes
     the shard fully local so the Pallas datapath can run on it.
+    ``gate_mask`` (fully local payloads only) overrides the flat-index
+    ternary gate — see :func:`_packed_a2a_local`.
     """
     kwargs = dict(ternary=ternary, gate_phase=gate_phase, interpret=interpret)
 
     if model_spec is None or all(a is None for a in model_spec):
-        return _packed_a2a_local(g, dp_axes, num_workers, ef=ef, **kwargs)
+        return _packed_a2a_local(g, dp_axes, num_workers, ef=ef,
+                                 gate_mask=gate_mask, **kwargs)
+    assert gate_mask is None, "gate_mask requires a fully local payload"
 
     manual = frozenset(a for axes in model_spec if axes is not None
                        for a in ((axes,) if isinstance(axes, str) else axes))

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
-from .buckets import AdmissionPlan
+from .buckets import AdmissionPlan, BucketLayout
 from .modes import (AggregationMode, Schedule, bits_per_element,
                     wire_schedule)
 
@@ -85,21 +85,53 @@ class IciModel:
     link_gbps: float = 50e9          # bytes/s per ICI link direction
     links_per_chip: float = 1.0      # effective links usable by the collective
     hop_latency_s: float = 1e-6      # per-step latency of a ring stage
+    launch_overhead_s: float = 20e-6  # fixed dispatch cost per collective
+                                      # launch (host dispatch + XLA ramp-up)
 
-    def collective_time(self, per_device_bytes: float,
-                        num_workers: int) -> float:
+    def collective_time(self, per_device_bytes: float, num_workers: int,
+                        num_launches: int = 1) -> float:
+        """Bandwidth term + per-launch latency (ring hops + dispatch).
+
+        ``num_launches`` is the number of separate collectives the bytes
+        are split across: each launch pays the full ring-stage latency
+        and the fixed dispatch overhead, which is exactly the term bucket
+        fusion amortizes (one launch per 32 MiB bucket instead of one
+        per gradient leaf).
+        """
         bw = self.link_gbps * self.links_per_chip
         steps = max(2 * (num_workers - 1), 1)
-        return per_device_bytes / bw + steps * self.hop_latency_s
+        per_launch = steps * self.hop_latency_s + self.launch_overhead_s
+        return per_device_bytes / bw + num_launches * per_launch
 
 
 def modeled_comm_time(n_elements: int, mode: AggregationMode,
                       schedule: Schedule, num_workers: int,
-                      ici: IciModel | None = None) -> float:
+                      ici: IciModel | None = None,
+                      num_launches: int = 1) -> float:
     """One-aggregation communication time under the ring/ICI model."""
     ici = ici or IciModel()
     b = wire_bytes_per_device(n_elements, mode, schedule, num_workers)
-    return ici.collective_time(b, num_workers)
+    return ici.collective_time(b, num_workers, num_launches=num_launches)
+
+
+def modeled_layout_comm_time(layout: BucketLayout, num_workers: int,
+                             ici: IciModel | None = None) -> float:
+    """Modeled comm time of one aggregation pass under a bucket layout.
+
+    Sums, over every collective launch the layout implies (one per fused
+    bucket plus one per unfused leaf), the wire-byte bandwidth term of
+    that launch's schedule and the per-launch latency.  Comparing the
+    32 MiB layout against the degenerate per-leaf layout
+    (``plan_buckets(..., bucket_bytes=1)``) shows why fusion wins: the
+    bytes are identical, the launch terms collapse from O(leaves) to
+    O(buckets).
+    """
+    ici = ici or IciModel()
+    total = 0.0
+    for key, n in layout.launches():
+        b = wire_bytes_per_device(n, key.mode, key.schedule, num_workers)
+        total += ici.collective_time(b, num_workers)
+    return total
 
 
 #: Payload sizes used by the paper's Fig 7 positioning experiment.

@@ -20,11 +20,12 @@ from .registry import (AggregationContext, ScheduleBackend,
                        unregister_schedule)
 from . import backends as _backends          # registers the built-ins
 from .session import (CompiledStep, Fabric, TrainState, aggregate_leaf,
-                      aggregate_tree, dp_num_workers)
+                      aggregate_tree, aggregate_tree_bucketed,
+                      dp_num_workers)
 
 __all__ = [
     "AggregationContext", "ScheduleBackend", "available_schedules",
     "get_schedule", "register_schedule", "unregister_schedule",
     "CompiledStep", "Fabric", "TrainState", "aggregate_leaf",
-    "aggregate_tree", "dp_num_workers",
+    "aggregate_tree", "aggregate_tree_bucketed", "dp_num_workers",
 ]

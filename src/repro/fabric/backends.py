@@ -4,8 +4,19 @@ Each backend wraps one of the core collectives (:mod:`repro.core.lowbit`)
 in the uniform ``aggregate(ctx, g, policy, ef)`` signature.  The Section-9
 baselines (MajoritySignSGD, SignOfMean) are registered too, so experiment
 plans can select them by name exactly like the production schedules.
+
+All built-ins are **fusable**: they additionally implement
+``aggregate_flat(ctx, flat, ternary=..., gate=...)`` over a 1-D
+bucket payload, which is what the bucketed aggregation path
+(:func:`repro.fabric.session.aggregate_tree_bucketed`) calls — one
+collective launch per 32 MiB bucket instead of one per gradient leaf.
+``threads_ef`` marks the backends that consume error feedback; the bucket
+layer injects/updates EF residuals per leaf around the fused collective
+so EF semantics stay bit-identical to the per-leaf path.
 """
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from ..core.lowbit import (fp32_allreduce, lowbit_packed_a2a,
                            lowbit_vote_psum, sign_of_mean)
@@ -22,9 +33,15 @@ class Fp32AllreduceBackend:
     """FP32 mean via XLA psum — the paper's bypass / calibration path."""
 
     name = "psum"
+    fusable = True
+    threads_ef = False
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         return fp32_allreduce(g, ctx.dp_axes), ef
+
+    def aggregate_flat(self, ctx: AggregationContext, flat, *,
+                       ternary: bool = False, gate=None):
+        return fp32_allreduce(flat, ctx.dp_axes)
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:
@@ -41,14 +58,33 @@ class VotePsumBackend:
     """
 
     name = "vote_psum"
+    fusable = True
+    threads_ef = True
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         return lowbit_vote_psum(
             g, ctx.dp_axes, ctx.num_workers, ternary=_ternary(policy),
             gate_phase=policy.gate_phase, ef=ef)
 
+    def aggregate_flat(self, ctx: AggregationContext, flat, *,
+                       ternary: bool = False, gate=None):
+        # gate.vector builds the concatenated per-leaf pattern on device
+        # (iota + mod), avoiding a bucket-sized host constant per step
+        gv = None if gate is None else gate.vector(jnp.float32)
+        u, _ = lowbit_vote_psum(flat, ctx.dp_axes, ctx.num_workers,
+                                ternary=ternary, gate=gv)
+        return u
+
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:
+        """Models the paper's logical 1-byte vote payload.
+
+        The XLA realization widens the psum operand to int32 to keep the
+        vote margin exact for W >= 128 (see ``lowbit_vote_psum``), so
+        bytes actually crossing ICI under this software schedule are
+        4x this figure; a controller-side popcount (or a staged int8
+        reduce) moves the modeled amount.
+        """
         f = (num_workers - 1) / num_workers
         return 2.0 * f * 1.0 * n_elements
 
@@ -58,6 +94,8 @@ class PackedA2ABackend:
     """The controller schedule: pack -> all_to_all -> PopCount -> gather."""
 
     name = "packed_a2a"
+    fusable = True
+    threads_ef = True
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         return lowbit_packed_a2a(
@@ -65,6 +103,16 @@ class PackedA2ABackend:
             model_spec=getattr(policy, "model_spec", None),
             ternary=_ternary(policy), gate_phase=policy.gate_phase, ef=ef,
             interpret=ctx.interpret)
+
+    def aggregate_flat(self, ctx: AggregationContext, flat, *,
+                       ternary: bool = False, gate=None):
+        # the packed schedule needs the host mask to pack gate words
+        # (1 bit/element once packed — see gate_words_from_mask)
+        mask = None if gate is None else gate.mask()
+        u, _ = lowbit_packed_a2a(flat, ctx.dp_axes, ctx.num_workers,
+                                 ternary=ternary, gate_mask=mask,
+                                 interpret=ctx.interpret)
+        return u
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:
@@ -77,9 +125,15 @@ class SignOfMeanBackend:
     """Sign *after* the FP32 mean — optimizer reference, FP32 wire cost."""
 
     name = "sign_of_mean"
+    fusable = True
+    threads_ef = False
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         return sign_of_mean(g, ctx.dp_axes), ef
+
+    def aggregate_flat(self, ctx: AggregationContext, flat, *,
+                       ternary: bool = False, gate=None):
+        return sign_of_mean(flat, ctx.dp_axes)
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:

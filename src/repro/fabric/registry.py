@@ -58,6 +58,23 @@ class ScheduleBackend(Protocol):
     not thread error feedback return ``ef`` unchanged.  Backends may
     additionally expose ``wire_bytes_per_device(n_elements, mode,
     num_workers, dtype_bytes)`` to participate in the traffic model.
+
+    **Bucket fusion (opt-in).**  A backend that sets ``fusable = True``
+    must also implement
+
+        aggregate_flat(ctx, flat, *, ternary=False, gate=None)
+
+    over a 1-D bucket payload (the concatenation of compatible leaves)
+    and return the 1-D aggregate.  ``gate`` is a
+    :class:`~repro.core.buckets.BucketGate` carrying the concatenated
+    per-leaf ternary gates (None for binary/FP32 buckets); call
+    ``gate.vector(dtype)`` for an on-device keep vector or
+    ``gate.mask()`` for the host boolean array (packed-word schedules).
+    ``threads_ef = True`` declares that the per-leaf ``aggregate``
+    consumes error feedback; the bucket layer then injects/updates EF
+    residuals per leaf around the fused collective (the backend's
+    ``aggregate_flat`` never sees EF).  Backends without ``fusable``
+    simply stay on the per-leaf path.
     """
 
     name: str

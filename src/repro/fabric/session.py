@@ -3,9 +3,11 @@
 A :class:`Fabric` is constructed once from ``(mesh, dp_axes, rules,
 interpret)`` and owns everything the old free-function API made every
 caller re-thread by hand: the worker count, group assignment, policy
-resolution, error-feedback state init/specs, per-leaf schedule dispatch
-(via the backend registry), and the per-plan-signature jit cache for
-compiled train steps.  It is the seam later scaling work (new
+resolution, error-feedback state init/specs, schedule dispatch (via the
+backend registry — by default through fused 32 MiB *buckets*, one
+collective per bucket instead of one per leaf; see
+:func:`aggregate_tree_bucketed`), and the per-plan-signature jit cache
+for compiled train steps.  It is the seam later scaling work (new
 collectives, async overlap, multi-backend) plugs into — swap or add a
 registered :class:`~repro.fabric.registry.ScheduleBackend` and every
 layer above (Trainer, dry-run, benchmarks) picks it up.
@@ -27,9 +29,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.aggregate import init_ef_states
-from ..core.buckets import (AdmissionPlan, GroupRules, assign_groups,
-                            group_sizes, resolve_policies)
-from ..core.modes import wire_schedule
+from ..core.buckets import (AdmissionPlan, BucketLayout,
+                            DEFAULT_BUCKET_BYTES, GroupRules, assign_groups,
+                            group_sizes, plan_buckets, resolve_policies)
+from ..core.lowbit import _ef_update
+from ..core.modes import AggregationMode, schedule_name, wire_schedule
 from .registry import AggregationContext, get_schedule
 
 Axes = Sequence[str] | str
@@ -90,6 +94,98 @@ def aggregate_tree(ctx: AggregationContext, grads: Any, policies: Any,
 
 
 # ---------------------------------------------------------------------------
+# bucketed (fused) tree aggregation
+# ---------------------------------------------------------------------------
+
+def _registry_fusable(schedule: str) -> bool:
+    """Layout-planner predicate: does this wire schedule's backend fuse?"""
+    try:
+        return bool(getattr(get_schedule(schedule), "fusable", False))
+    except KeyError:
+        return False        # unknown name: per-leaf path raises the
+                            # canonical registry error at dispatch time
+
+
+def aggregate_tree_bucketed(ctx: AggregationContext, grads: Any,
+                            policies: Any, ef_states: Any | None = None, *,
+                            layout: BucketLayout | None = None,
+                            bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Aggregate a gradient pytree through fused flat buckets.
+
+    Semantically identical to :func:`aggregate_tree` (bit-for-bit for
+    every built-in schedule, EF states included) but launches **one**
+    collective per bucket instead of one per leaf: compatible leaves
+    (same :class:`~repro.core.buckets.BucketKey`) are flattened and
+    concatenated, the backend's ``aggregate_flat`` runs on the fused
+    payload, and results are scattered back to the original leaf shapes.
+
+    Error feedback is handled per leaf *around* the fused collective —
+    injection ``g + e`` before concatenation and the EF-signSGD residual
+    update (whose ``beta = mean|g_eff|`` is a per-leaf statistic) after
+    the scatter — which is exactly what keeps EF semantics identical to
+    the per-leaf path.  TP-sharded leaves and non-fusable backends stay
+    on the per-leaf path (``layout.unfused``).
+
+    ``layout`` may be precomputed (and cached — it is stable across
+    steps); otherwise it is planned here from the grads' shapes.
+    """
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    p_leaves = treedef.flatten_up_to(policies)
+    if ef_states is None:
+        e_leaves = [None] * len(g_leaves)
+    else:
+        e_leaves = treedef.flatten_up_to(ef_states)
+    if layout is None:
+        layout = plan_buckets(grads, policies, bucket_bytes=bucket_bytes,
+                              fusable=_registry_fusable)
+    assert layout.num_leaves == len(g_leaves), (
+        f"bucket layout planned for {layout.num_leaves} leaves applied to "
+        f"a {len(g_leaves)}-leaf gradient tree")
+
+    agg: list = [None] * len(g_leaves)
+    new_ef = list(e_leaves)
+
+    # per-leaf fallback — same dispatch as aggregate_tree
+    for uf in layout.unfused:
+        g, pol, e = g_leaves[uf.leaf], p_leaves[uf.leaf], e_leaves[uf.leaf]
+        use_ef = pol.error_feedback and e is not None and e.ndim > 0
+        u, ef_out = aggregate_leaf(ctx, g, pol, ef=e[0] if use_ef else None)
+        agg[uf.leaf] = u
+        if use_ef:
+            new_ef[uf.leaf] = ef_out[None]
+
+    for bucket in layout.buckets:
+        backend = get_schedule(bucket.key.schedule)
+        threads_ef = getattr(backend, "threads_ef", False)
+        flats, g_effs = [], {}
+        for slot in bucket.slots:
+            g = g_leaves[slot.leaf].reshape(-1)
+            e, pol = e_leaves[slot.leaf], p_leaves[slot.leaf]
+            if (threads_ef and pol.error_feedback and e is not None
+                    and e.ndim > 0):
+                g = g + e[0].reshape(-1).astype(g.dtype)
+                g_effs[slot.leaf] = g
+            flats.append(g)
+        flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        ternary = (AggregationMode(bucket.key.mode)
+                   == AggregationMode.G_TERNARY)
+        u_flat = backend.aggregate_flat(ctx, flat, ternary=ternary,
+                                        gate=bucket.gate())
+        for slot in bucket.slots:
+            u = u_flat[slot.offset:slot.offset + slot.size]
+            agg[slot.leaf] = u.reshape(slot.shape)
+            if slot.leaf in g_effs:
+                e = e_leaves[slot.leaf]
+                g_eff = g_effs[slot.leaf].reshape(slot.shape)
+                new_ef[slot.leaf] = _ef_update(g_eff, e[0])[None]
+
+    aggregates = jax.tree_util.tree_unflatten(treedef, agg)
+    if ef_states is None:
+        return aggregates, None
+    return aggregates, jax.tree_util.tree_unflatten(treedef, new_ef)
+
+
+# ---------------------------------------------------------------------------
 # train-step state (owned here; re-exported by repro.runtime)
 # ---------------------------------------------------------------------------
 
@@ -128,12 +224,46 @@ def _named(mesh, spec_tree):
         spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
 
 
+def _optimizer_has_nu(optimizer) -> bool:
+    """Does this optimizer's state carry a second moment (nu)?
+
+    Prefers the optimizer's own ``has_nu`` hook (see
+    :class:`repro.optim.optimizers.Optimizer`), falling back to probing
+    the actual init state for duck-typed optimizers — never the class
+    name, which breaks for subclasses and new adaptive optimizers.
+    """
+    flag = getattr(optimizer, "has_nu", None)
+    if flag is not None:
+        return bool(flag)
+    from ..optim.optimizers import state_has_nu
+    return state_has_nu(optimizer)
+
+
 def _opt_shardings(optimizer, mu_sh, mesh):
     """OptState(step, mu, nu) sharding tree matching optimizer kind."""
     from ..optim.optimizers import OptState
     scalar = NamedSharding(mesh, P())
-    has_nu = type(optimizer).__name__ == "AdamW"
-    return OptState(step=scalar, mu=mu_sh, nu=mu_sh if has_nu else None)
+    return OptState(step=scalar, mu=mu_sh,
+                    nu=mu_sh if _optimizer_has_nu(optimizer) else None)
+
+
+def _split_microbatches(batch: Any, grad_accum: int) -> Any:
+    """Reshape each batch leaf to ``(grad_accum, B // grad_accum, ...)``.
+
+    Raises at trace time when the per-device batch is not divisible —
+    the old silent ``x.shape[0] // grad_accum`` reshape dropped trailing
+    samples.
+    """
+    def split(x):
+        if x.shape[0] % grad_accum:
+            raise ValueError(
+                f"grad_accum={grad_accum} must divide the per-device batch "
+                f"size, but got a batch leaf of shape {tuple(x.shape)} "
+                f"({x.shape[0]} % {grad_accum} = {x.shape[0] % grad_accum}); "
+                f"trailing samples would be silently dropped")
+        return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                         + x.shape[1:])
+    return jax.tree.map(split, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +281,9 @@ class Fabric:
     def __init__(self, mesh=None, dp_axes: Axes | None = None, *,
                  rules: GroupRules | None = None,
                  interpret: bool | None = None,
-                 num_workers: int | None = None):
+                 num_workers: int | None = None,
+                 bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 fused: bool = True):
         self.mesh = mesh
         if dp_axes is None:
             dp_axes = ("data",) if mesh is not None else ()
@@ -165,7 +297,10 @@ class Fabric:
             self.num_workers = dp_num_workers(mesh, self.dp_axes)
         else:
             self.num_workers = 1
+        self.bucket_bytes = int(bucket_bytes)
+        self.fused = bool(fused)
         self._compiled: dict[tuple, CompiledStep] = {}
+        self._layouts: dict[tuple, BucketLayout] = {}
 
     # -- context / policy resolution ------------------------------------
 
@@ -214,8 +349,39 @@ class Fabric:
 
     # -- aggregation ----------------------------------------------------
 
+    def layout_for(self, params_like: Any, plan: AdmissionPlan | Any,
+                   pspecs: Any | None = None) -> BucketLayout:
+        """Bucket layout for a (tree, plan) pair — cached per signature.
+
+        The layout is a pure function of leaf order/shapes/dtypes, the
+        resolved policies, and this session's ``bucket_bytes``, so it is
+        stable across steps and shared with the compiled-step cache.
+        """
+        if isinstance(plan, AdmissionPlan):
+            policies = self.resolve(params_like, plan, pspecs=pspecs)
+        else:
+            policies = plan
+        leaves, treedef = jax.tree_util.tree_flatten(params_like)
+        pol_leaves = tuple(jax.tree_util.tree_flatten(
+            policies, is_leaf=_is_policy)[0])
+        # the layout also depends on which backends currently fuse, so a
+        # backend swapped under the same name (register/unregister) must
+        # not hit a stale cached layout
+        wires = {schedule_name(wire_schedule(p.mode, p.schedule))
+                 for p in pol_leaves}
+        fus_sig = tuple(sorted((w, _registry_fusable(w)) for w in wires))
+        key = (treedef,
+               tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
+               pol_leaves, self.bucket_bytes, fus_sig)
+        if key not in self._layouts:
+            self._layouts[key] = plan_buckets(
+                params_like, policies, bucket_bytes=self.bucket_bytes,
+                fusable=_registry_fusable)
+        return self._layouts[key]
+
     def aggregate(self, grads: Any, plan: AdmissionPlan | Any,
-                  ef: Any | None = None, *, pspecs: Any | None = None):
+                  ef: Any | None = None, *, pspecs: Any | None = None,
+                  fused: bool | None = None):
         """Aggregate a gradient pytree under a plan (or resolved policies).
 
         Runs inside a shard_map whose manual axes are this session's
@@ -223,12 +389,22 @@ class Fabric:
         ``dp_axes=()`` it is the host-local/virtual-worker path.  ``plan``
         may be an :class:`AdmissionPlan` (resolved against ``grads`` with
         this session's rules) or an already-resolved LeafPolicy pytree.
-        Returns ``(aggregates, new_ef)``.
+
+        By default (``fused=None`` -> the session's ``fused`` flag, True
+        unless overridden) compatible leaves are fused into flat
+        ``bucket_bytes`` buckets and aggregated by one collective per
+        bucket — bit-identical to the per-leaf path (``fused=False``)
+        for every built-in schedule.  Returns ``(aggregates, new_ef)``.
         """
         if isinstance(plan, AdmissionPlan):
             policies = self.resolve(grads, plan, pspecs=pspecs)
         else:
             policies = plan
+        use_fused = self.fused if fused is None else fused
+        if use_fused:
+            layout = self.layout_for(grads, policies)
+            return aggregate_tree_bucketed(self.context, grads, policies,
+                                           ef_states=ef, layout=layout)
         return aggregate_tree(self.context, grads, policies, ef_states=ef)
 
     # -- step builder ---------------------------------------------------
@@ -239,14 +415,18 @@ class Fabric:
                    loss: Callable | None = None,
                    zero1: bool = True,
                    grad_accum: int = 1,
-                   donate: bool = True) -> CompiledStep:
+                   donate: bool = True,
+                   fused: bool | None = None) -> CompiledStep:
         """Compile one train step for a given admission plan.
 
         ``params_like``: a concrete or abstract (ShapeDtypeStruct) params
         tree — used only for structure/paths.  ``grad_accum`` splits the
         per-device batch into that many sequentially-scanned microbatches
         (activation memory / grad_accum, one aggregation per step —
-        communication volume unchanged, overlap-friendly).
+        communication volume unchanged, overlap-friendly).  ``fused``
+        (default: the session's flag) routes aggregation through the
+        bucket layout — one collective per 32 MiB bucket; the layout is
+        planned here once and cached with the compiled step.
         """
         if self.mesh is None:
             raise ValueError("Fabric.build_step needs a mesh-bound session "
@@ -263,6 +443,9 @@ class Fabric:
         groups = self.groups(params_like)
         ef_specs = self.ef_specs(policies, pspecs)
         lf = loss or (lambda p, b: model_loss_fn(p, cfg, b))
+        use_fused = self.fused if fused is None else fused
+        layout = (self.layout_for(params_like, policies)
+                  if use_fused else None)
 
         @functools.partial(
             jax.shard_map, mesh=mesh,
@@ -271,9 +454,7 @@ class Fabric:
             axis_names=frozenset(dp), check_vma=False)
         def _grad_agg(params, batch, ef):
             if grad_accum > 1:
-                micro = jax.tree.map(
-                    lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
-                                        + x.shape[1:]), batch)
+                micro = _split_microbatches(batch, grad_accum)
                 g0 = jax.tree.map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
@@ -290,7 +471,12 @@ class Fabric:
                 grads = jax.tree.map(lambda x: x / grad_accum, grads)
             else:
                 lval, grads = jax.value_and_grad(lf)(params, batch)
-            agg, new_ef = aggregate_tree(ctx, grads, policies, ef_states=ef)
+            if use_fused:
+                agg, new_ef = aggregate_tree_bucketed(
+                    ctx, grads, policies, ef_states=ef, layout=layout)
+            else:
+                agg, new_ef = aggregate_tree(ctx, grads, policies,
+                                             ef_states=ef)
             lval = jax.lax.pmean(lval, dp)
             return lval, agg, new_ef
 
@@ -327,7 +513,9 @@ class Fabric:
             out_shardings=(state_shardings, None),
             donate_argnums=(0,) if donate else ())
         aux = {"policies": policies, "groups": groups, "num_workers": w,
-               "ef_specs": ef_specs, "pspecs": pspecs}
+               "ef_specs": ef_specs, "pspecs": pspecs, "layout": layout,
+               "num_launches": (layout.num_launches if layout is not None
+                                else len(jax.tree.leaves(params_like)))}
         return CompiledStep(jitted, state_shardings, batch_sharding, aux)
 
     # -- per-plan-signature jit cache -----------------------------------
@@ -337,7 +525,8 @@ class Fabric:
                  with_diagnostics: bool = False,
                  loss: Callable | None = None,
                  zero1: bool = True,
-                 grad_accum: int = 1) -> CompiledStep:
+                 grad_accum: int = 1,
+                 fused: bool | None = None) -> CompiledStep:
         """Cached :meth:`build_step` — one compiled step per plan
         signature (the XLA analogue of the controller mode latch).
 
@@ -345,17 +534,19 @@ class Fabric:
         frozen dataclasses / callables), so several Trainers may safely
         share one session without cross-model cache hits.
         """
+        use_fused = self.fused if fused is None else fused
         key = (plan.signature(), with_diagnostics, zero1, grad_accum,
-               cfg, optimizer, loss)
+               cfg, optimizer, loss, use_fused)
         if key not in self._compiled:
             self._compiled[key] = self.build_step(
                 cfg, optimizer, plan, params_like,
                 with_diagnostics=with_diagnostics, loss=loss, zero1=zero1,
-                grad_accum=grad_accum)
+                grad_accum=grad_accum, fused=use_fused)
         return self._compiled[key]
 
     def clear_cache(self) -> None:
         self._compiled.clear()
+        self._layouts.clear()
 
     def __repr__(self) -> str:
         return (f"Fabric(dp_axes={self.dp_axes}, "

@@ -130,11 +130,34 @@ def ternary_gate_words(num_rows: int, phase: int = 0) -> jax.Array:
     update and the third returns zero, per Section 2 of the paper.
     """
     assert num_rows % PACK == 0
-    idx = np.arange(num_rows * LANE, dtype=np.int64).reshape(num_rows, LANE)
-    keep = (((idx + phase) % 3) != 2).astype(np.uint32)
-    keep = keep.reshape(num_rows // PACK, PACK, LANE)
-    words = np.sum(keep << np.arange(PACK, dtype=np.uint32).reshape(1, PACK, 1),
+    keep = ((np.arange(num_rows * LANE, dtype=np.int64) + phase) % 3) != 2
+    return gate_words_from_mask(keep)
+
+
+def gate_words_from_mask(keep: np.ndarray,
+                         pad_words: int | None = None) -> jax.Array:
+    """Arbitrary flat keep mask (N,) -> packed gate word plane.
+
+    Generalizes :func:`ternary_gate_words` to any host-side boolean
+    pattern — the fused bucket path uses it to pack the concatenation of
+    per-leaf 2-of-3 gates into one bucket-wide gate.  Elements beyond N
+    (canonical padding) keep = 1; ``pad_words`` optionally right-pads the
+    word plane with all-ones rows to a given row count (the all_to_all
+    row padding of the packed schedule — padding is dropped on unpack,
+    so its gate value is irrelevant).
+    """
+    keep = np.asarray(keep, bool).reshape(-1)
+    n = keep.shape[0]
+    full = np.ones(padded_len(n), np.uint32)
+    full[:n] = keep.astype(np.uint32)
+    rows = full.shape[0] // LANE
+    full = full.reshape(rows, LANE).reshape(rows // PACK, PACK, LANE)
+    words = np.sum(full << np.arange(PACK, dtype=np.uint32).reshape(1, PACK, 1),
                    axis=1, dtype=np.uint64).astype(np.uint32)
+    if pad_words is not None and pad_words > words.shape[0]:
+        pad = np.full((pad_words - words.shape[0], LANE), 0xFFFFFFFF,
+                      np.uint32)
+        words = np.concatenate([words, pad], axis=0)
     return jnp.asarray(words)
 
 

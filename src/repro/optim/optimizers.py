@@ -54,10 +54,33 @@ class Optimizer:
               ) -> tuple[Any, OptState]:
         raise NotImplementedError
 
+    @property
+    def has_nu(self) -> bool:
+        """Whether this optimizer's state carries a second moment (nu).
+
+        Derived by introspecting the *actual* init state on a scalar
+        probe — not the class name — so subclasses and new adaptive
+        optimizers are classified correctly (the train-step builder uses
+        this to shard ``nu`` like ``mu`` under ZeRO-1).  Override when
+        probing ``init`` is undesirable.
+        """
+        return state_has_nu(self)
+
     def _lr(self, step):
         return lr_schedule(step, peak_lr=self.peak_lr,
                            warmup_steps=self.warmup_steps,
                            total_steps=self.total_steps)
+
+
+def state_has_nu(optimizer) -> bool:
+    """Probe an optimizer's init state for a second-moment (nu) buffer.
+
+    The single implementation behind :attr:`Optimizer.has_nu` and the
+    session's duck-typed fallback — works for any object exposing
+    ``init(params)``.
+    """
+    state = optimizer.init(jnp.zeros((1,), jnp.float32))
+    return getattr(state, "nu", None) is not None
 
 
 @dataclasses.dataclass(frozen=True)

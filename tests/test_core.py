@@ -16,6 +16,36 @@ from repro.core.exposure import ExposureModel, envelope_sweep
 
 
 # ---------------------------------------------------------------------------
+# vote_psum margin accumulation (regression: int8 psum wrapped for W >= 128)
+# ---------------------------------------------------------------------------
+
+def test_vote_psum_majority_correct_at_w256():
+    """W=256 virtual workers: the vote margin spans [-256, 256], which
+    wrapped the old int8 psum (e.g. 256 unanimous votes -> margin 0, and
+    margin +128 -> -128, flipping the majority).  Votes must be widened
+    to int32 before the reduction."""
+    from repro.core import lowbit_vote_psum
+
+    w, n = 256, 6
+    # per-element count of positive votes; margins 2c - W hit the int8
+    # wrap points: 256 -> 0, 192 -> +128 (int8: -128), 64 -> -128, etc.
+    pos_counts = np.array([256, 192, 129, 127, 64, 0])
+    g = np.full((w, n), -1.0, np.float32)
+    for i, c in enumerate(pos_counts):
+        g[:c, i] = 1.0
+    # shuffle workers per element so the pattern isn't degenerate
+    rng = np.random.RandomState(0)
+    for i in range(n):
+        rng.shuffle(g[:, i])
+
+    u = jax.vmap(
+        lambda x: lowbit_vote_psum(x, "w", w)[0],
+        axis_name="w")(jnp.asarray(g))
+    want = np.sign(2 * pos_counts - w).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(u[0]), want)
+
+
+# ---------------------------------------------------------------------------
 # bucket manager / group rules
 # ---------------------------------------------------------------------------
 

@@ -248,6 +248,55 @@ def test_wire_bytes_resolve_through_registry():
 
 
 # ---------------------------------------------------------------------------
+# step-builder fixes: grad_accum divisibility + optimizer introspection
+# ---------------------------------------------------------------------------
+
+def test_split_microbatches_raises_on_indivisible_batch():
+    """The old reshape silently dropped trailing samples when grad_accum
+    did not divide the per-device batch; it must raise at trace time."""
+    from repro.fabric.session import _split_microbatches
+
+    batch = {"x": jnp.zeros((8, 4)), "y": jnp.zeros((8,))}
+    micro = _split_microbatches(batch, 4)
+    assert micro["x"].shape == (4, 2, 4) and micro["y"].shape == (4, 2)
+
+    bad = {"x": jnp.zeros((10, 4)), "y": jnp.zeros((10,))}
+    with pytest.raises(ValueError, match=r"grad_accum=4 must divide"):
+        _split_microbatches(bad, 4)
+    # the error names the offending shape
+    with pytest.raises(ValueError, match=r"\(10, 4\)"):
+        _split_microbatches(bad, 4)
+
+
+def test_opt_shardings_detect_nu_by_state_not_class_name():
+    """AdamW subclasses / custom adaptive optimizers must get a nu
+    sharding tree; SGD-family must not — detected from the actual init
+    state, never the class name."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.fabric.session import _opt_shardings, _optimizer_has_nu
+    from repro.optim import AdamW, SgdMomentum
+    from repro.optim.optimizers import OptState
+
+    class RenamedAdamW(AdamW):          # name check would miss this
+        pass
+
+    class DuckAdaptive:                 # no Optimizer base at all
+        def init(self, params):
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape), params)
+            return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                            nu=zeros)
+
+    assert AdamW().has_nu and RenamedAdamW().has_nu
+    assert not SgdMomentum().has_nu
+    assert _optimizer_has_nu(DuckAdaptive())
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    mu_sh = {"w": NamedSharding(mesh, P())}
+    assert _opt_shardings(RenamedAdamW(), mu_sh, mesh).nu is mu_sh
+    assert _opt_shardings(SgdMomentum(), mu_sh, mesh).nu is None
+
+
+# ---------------------------------------------------------------------------
 # the extension seam: custom schedules train without touching core files
 # ---------------------------------------------------------------------------
 

@@ -55,3 +55,16 @@ def test_zero1_specs_shard_first_divisible_dim():
     assert out["tiny"] == P(None)                     # 3 not divisible
     off = optimizer_state_pspecs(pspecs, params, dp_size=8, zero1=False)
     assert off["big"] == P()
+
+
+def test_has_nu_derived_from_init_state():
+    """`has_nu` introspects the actual init state, so subclasses and new
+    adaptive optimizers classify correctly without name sniffing."""
+    class Lion(SgdMomentum):             # adaptive-naming decoy, no nu
+        pass
+
+    class WarmAdamW(AdamW):              # AdamW subclass keeps its nu
+        pass
+
+    assert AdamW().has_nu and WarmAdamW().has_nu
+    assert not SgdMomentum().has_nu and not Lion().has_nu
