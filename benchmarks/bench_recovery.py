@@ -8,8 +8,9 @@ the paper's Fig 6 callouts.
 """
 import numpy as np
 
-from repro.core.admission import Commander, ControlPlane, CusumGuard, Supervisor
+from repro.core.admission import Commander, CusumGuard, Supervisor
 from repro.core.experiments import hard_task, run_training
+from repro.fabric.control import Telemetry, make_controller
 
 STEPS = 600
 BATCH = 64
@@ -18,7 +19,8 @@ LR = 2e-4
 
 def _pilot(degrade=None):
     """G-Binary-default policy with a Supervisor that recovers to FP32."""
-    cp = ControlPlane(
+    cp = make_controller(
+        "paper",
         commander=Commander(tau_binary=0.2),
         supervisor=Supervisor(guard=CusumGuard(kappa=0.02, h=0.6),
                               cooldown_steps=60),
@@ -26,9 +28,9 @@ def _pilot(degrade=None):
     trace = {"lowbit_steps": 0, "total": 0, "traffic": 0.0}
 
     def callback(step, loss):
-        plan = cp.step(loss, cosines={
+        plan = cp.observe(Telemetry(step=step, loss=loss, cosines={
             "backbone": {"gbinary": 0.8, "gternary": 0.7},
-            "head": {"gbinary": 0.8, "gternary": 0.7}})
+            "head": {"gbinary": 0.8, "gternary": 0.7}}))
         lowbit = "gbinary" in plan.signature()
         trace["total"] += 1
         trace["lowbit_steps"] += int(lowbit)

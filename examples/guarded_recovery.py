@@ -1,19 +1,32 @@
 """Paper Section 8 (Fig 6): guarded-recovery pilot with live mode selection.
 
-Training starts on FP32, the Commander admits G-Binary after warm-up, a
-degradation window is injected mid-run, the Supervisor's CUSUM guard
-recovers to FP32, and after cooldown the mode is re-admitted.  The trace
-prints every mode transition.
+Drives the registered ``"paper"`` admission controller
+(:mod:`repro.fabric.control`) through its phase program:
+
+    warmup --(warmup_steps)--> calibrate --(cosines)--> admitted
+       admitted/readmitted --(CUSUM trigger)--> recovery
+       recovery --(cooldown over)--> readmitted
+
+Training starts on FP32; once warm-up ends and calibration cosines are
+available the Commander admits G-Binary; a degradation window is
+injected mid-run; the Supervisor's CUSUM guard recovers to FP32; and
+after cooldown the mode is re-admitted.  Each step the pilot feeds the
+controller one typed :class:`~repro.fabric.control.Telemetry` record and
+reads back the latched plan — the same ``observe`` path the production
+Trainer drives (the pre-registry ``ControlPlane.step(loss, cosines=...)``
+API remains available as a deprecation shim in ``repro.core.admission``).
+The trace prints every mode transition.
 
 Run:  PYTHONPATH=src python examples/guarded_recovery.py
 """
-from repro.core.admission import (Commander, ControlPlane, CusumGuard,
-                                  Supervisor)
+from repro.core.admission import Commander, CusumGuard, Supervisor
 from repro.core.experiments import hard_task, run_training
+from repro.fabric.control import Telemetry, make_controller
 
 
 def main():
-    cp = ControlPlane(
+    controller = make_controller(
+        "paper",
         commander=Commander(tau_binary=0.2),
         supervisor=Supervisor(guard=CusumGuard(kappa=0.02, h=0.6),
                               cooldown_steps=60),
@@ -21,9 +34,9 @@ def main():
     state = {"mode": ("fp32", "fp32"), "lowbit": 0, "total": 0}
 
     def callback(step, loss):
-        plan = cp.step(loss, cosines={
+        plan = controller.observe(Telemetry(step=step, loss=loss, cosines={
             "backbone": {"gbinary": 0.8, "gternary": 0.7},
-            "head": {"gbinary": 0.8, "gternary": 0.7}})
+            "head": {"gbinary": 0.8, "gternary": 0.7}}))
         lowbit = "gbinary" in plan.signature()
         mode = ("gbinary", "gbinary") if lowbit else ("fp32", "fp32")
         state["total"] += 1
@@ -39,11 +52,12 @@ def main():
                      plan_callback=callback, seed=0)
 
     frac = state["lowbit"] / state["total"]
+    kinds = [e.kind for e in controller.events]
     print(f"\nfinal acc      : {r.final_acc:.3f}")
     print(f"low-bit steps  : {100*frac:.1f}%")
-    print(f"control events : {[e.kind for e in cp.events]}")
-    assert "recovery" in [e.kind for e in cp.events], "guard never fired"
-    assert "readmitted" in [e.kind for e in cp.events], "never re-admitted"
+    print(f"control events : {kinds}")
+    assert "recovery" in kinds, "guard never fired"
+    assert "readmitted" in kinds, "never re-admitted"
     print("OK")
 
 

@@ -6,13 +6,17 @@ result chain:
   2. hard fine-grained workload: full-path low-bit collapses;
   3. cosine diagnostics localize the sensitive group;
   4. layer-aware admission (low-bit backbone + FP32 head) recovers the
-     accuracy at a fraction of the gradient traffic.
+     accuracy at a fraction of the gradient traffic;
+  5. the same operating point expressed as a user-defined
+     :class:`repro.fabric.control.PolicyProgram` phase schedule
+     ("everything low-bit, head back on FP32 after step N").
 
 Run:  PYTHONPATH=src python examples/layer_aware_admission.py [--fast]
 """
 import argparse
 
 from repro.core.experiments import easy_task, hard_task, run_training
+from repro.fabric.control import PolicyProgram
 
 
 def main():
@@ -46,6 +50,19 @@ def main():
     print(f"  mixed    acc={r_mix.final_acc:.3f} "
           f"traffic={r_mix.traffic_ratio:.3f} "
           f"(recovers {100*(r_mix.final_acc - r_lb.final_acc):.1f} pts)")
+
+    print("== 5. the same policy as a declarative phase program ==")
+    # warm-up on FP32, admit everything to G-Binary, then pull the head
+    # back to FP32 mid-run — a user-defined phase schedule, no custom
+    # control-loop code
+    program = PolicyProgram.staged([
+        ("warmup", ("fp32", "fp32"), 50),
+        ("all_lowbit", ("gbinary", "gbinary"), steps_h // 2),
+        ("head_fp32", ("gbinary", "fp32"), None)])
+    r_prog = run_training(ht, policy="gbinary", head_policy="fp32",
+                          steps=steps_h, batch=64, lr=2e-4, program=program)
+    print(f"  staged   acc={r_prog.final_acc:.3f} "
+          f"phases={[e.kind for e in program.events]}")
 
 
 if __name__ == "__main__":

@@ -13,10 +13,16 @@ Fault-tolerance contract (what the node-failure / elastic tests exercise):
     different DP degree and GSPMD re-lays the state out.
   * **Async save** — serialization runs on a background thread so the
     training loop overlaps checkpoint I/O with compute; ``wait()`` fences.
+  * **Controller threading** — pass ``controller=`` to
+    :meth:`CheckpointManager.maybe_save` / :meth:`CheckpointManager.restore`
+    and the admission controller's ``state_dict()`` rides in the manifest's
+    ``extra`` (JSON) and is loaded back on restore, so CUSUM statistics,
+    Supervisor cooldown, and the admitted plan survive failure recovery.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
@@ -121,9 +127,15 @@ class CheckpointManager:
         self.saves = 0
 
     def maybe_save(self, step: int, tree: Any, extra: Optional[dict] = None,
-                   force: bool = False) -> bool:
+                   force: bool = False, controller: Any = None) -> bool:
         if not force and (self.interval <= 0 or step % self.interval != 0):
             return False
+        if controller is not None and hasattr(controller, "state_dict"):
+            extra = dict(extra or {})
+            extra["controller"] = {
+                "name": getattr(controller, "name",
+                                type(controller).__name__),
+                "state": controller.state_dict()}
         self.wait()
         # snapshot to host synchronously (cheap vs serialization) so the
         # trainer can mutate state while the writer thread works
@@ -147,6 +159,25 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def restore(self, target_tree: Any, target_shardings: Any | None = None):
+    def restore(self, target_tree: Any, target_shardings: Any | None = None,
+                controller: Any = None):
         self.wait()
-        return restore_latest(self.directory, target_tree, target_shardings)
+        restored = restore_latest(self.directory, target_tree,
+                                  target_shardings)
+        if (restored is not None and controller is not None
+                and hasattr(controller, "load_state_dict")):
+            blob = (restored[2] or {}).get("controller")
+            if blob is not None:
+                saved = blob.get("name")
+                mine = getattr(controller, "name", type(controller).__name__)
+                if saved is not None and saved != mine:
+                    # resuming under a different policy is a legitimate
+                    # operator choice — keep the fresh controller rather
+                    # than feeding it a foreign state dict
+                    logging.getLogger("repro.checkpoint").warning(
+                        "checkpoint carries %r controller state; active "
+                        "controller is %r — controller state not restored",
+                        saved, mine)
+                else:
+                    controller.load_state_dict(blob["state"])
+        return restored

@@ -17,6 +17,11 @@ telemetry to training-runtime telemetry:
 The controller itself (the compiled train step) only ever receives mode
 metadata — an :class:`AdmissionPlan` — mirroring the paper's "the control
 plane writes only mode metadata; it does not inspect gradient payloads".
+
+This module holds the *math* of the three roles.  The control loop that
+sequences them (phase machine, telemetry schema, registry) lives in
+:mod:`repro.fabric.control`; the :class:`ControlPlane` class below is a
+deprecation shim over its ``"paper"`` controller.
 """
 from __future__ import annotations
 
@@ -137,6 +142,13 @@ class CusumGuard:
     def reset(self) -> None:
         self.mu, self.s = None, 0.0
 
+    def state_dict(self) -> dict:
+        return {"mu": self.mu, "s": self.s}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.mu = None if state["mu"] is None else float(state["mu"])
+        self.s = float(state["s"])
+
 
 @dataclasses.dataclass
 class Supervisor:
@@ -161,6 +173,14 @@ class Supervisor:
     def in_cooldown(self) -> bool:
         return self._cooldown_left > 0
 
+    def state_dict(self) -> dict:
+        return {"cooldown_left": self._cooldown_left,
+                "guard": self.guard.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._cooldown_left = int(state["cooldown_left"])
+        self.guard.load_state_dict(state["guard"])
+
 
 # ---------------------------------------------------------------------------
 # Control plane (mode-latch owner)
@@ -174,57 +194,82 @@ class ControlEvent:
 
 
 class ControlPlane:
-    """Warm-up on FP32 -> calibrate -> admit -> guarded recovery -> re-admit.
+    """Deprecated shim over :mod:`repro.fabric.control`'s ``"paper"``
+    controller.
 
-    Drives the mode latch (the current AdmissionPlan); the training runtime
-    re-jits (cached) when the plan signature changes.
+    New code should use the controller registry directly::
+
+        from repro.fabric.control import make_controller, Telemetry
+        controller = make_controller("paper", warmup_steps=50)
+        plan = controller.observe(Telemetry(step=k, loss=loss, cosines=cos))
+
+    This wrapper keeps the historical ``step(loss, cosines=...)`` call
+    signature and the ``plan`` / ``events`` attributes, and — because it
+    forwards ``observe`` / ``state_dict`` / ``load_state_dict`` /
+    ``wants_diagnostics`` — still satisfies the
+    :class:`repro.fabric.control.Controller` protocol, so existing
+    ``Trainer(..., control=ControlPlane(...))`` call sites keep working.
+    Compared to the pre-registry plane, admission now *retries* while
+    calibration cosines are pending instead of firing only at exactly
+    ``step == warmup_steps`` (the silent never-admit failure mode), and a
+    ``warmup_end`` event precedes ``admitted``.
     """
+
+    name = "paper"
 
     def __init__(self, commander: Commander | None = None,
                  supervisor: Supervisor | None = None,
                  predictor: Predictor | None = None,
                  warmup_steps: int = 20):
-        self.commander = commander or Commander()
-        self.supervisor = supervisor or Supervisor()
-        self.predictor = predictor
-        self.warmup_steps = warmup_steps
-        self.plan = AdmissionPlan.fp32_all()
-        self._admitted_plan: AdmissionPlan | None = None
-        self.events: list[ControlEvent] = []
-        self._step = 0
+        # lazy import: `core` stays importable without the fabric layer,
+        # and fabric.control imports this module's role classes
+        from ..fabric.control import PaperController
+        self._impl = PaperController(commander=commander,
+                                     supervisor=supervisor,
+                                     predictor=predictor,
+                                     warmup_steps=warmup_steps)
 
-    def _emit(self, kind: str) -> None:
-        self.events.append(ControlEvent(self._step, kind, self.plan.signature()))
+    @property
+    def plan(self) -> AdmissionPlan:
+        return self._impl.plan
+
+    @property
+    def events(self) -> list["ControlEvent"]:
+        return self._impl.events
+
+    @property
+    def commander(self) -> Commander:
+        return self._impl.commander
+
+    @property
+    def supervisor(self) -> Supervisor:
+        return self._impl.supervisor
+
+    @property
+    def predictor(self) -> Predictor | None:
+        return self._impl.predictor
+
+    @property
+    def warmup_steps(self) -> int:
+        return self._impl.warmup_steps
+
+    @property
+    def wants_diagnostics(self) -> bool:
+        return self._impl.wants_diagnostics
 
     def step(self, loss: float,
              cosines: Mapping[str, Mapping[str, float]] | None = None
              ) -> AdmissionPlan:
         """Advance one step of policy; returns the plan for the *next* step."""
-        self._step += 1
-        recovering = self.supervisor.observe(loss)
+        from ..fabric.control import Telemetry
+        return self._impl.observe(Telemetry(step=self._impl._observed + 1,
+                                            loss=loss, cosines=cosines))
 
-        if recovering and self.plan.signature() != AdmissionPlan.fp32_all().signature():
-            self.plan = AdmissionPlan.fp32_all()
-            self._emit("recovery")
-            return self.plan
+    def observe(self, telemetry) -> AdmissionPlan:
+        return self._impl.observe(telemetry)
 
-        if self._step < self.warmup_steps:
-            return self.plan
+    def state_dict(self) -> dict:
+        return self._impl.state_dict()
 
-        if self._step == self.warmup_steps and cosines:
-            self.plan = self.commander.propose(cosines)
-            self._admitted_plan = self.plan
-            self._emit("admitted")
-            return self.plan
-
-        # re-admission after cooldown completes
-        if (self._admitted_plan is not None
-                and not self.supervisor.in_cooldown
-                and self.plan.signature() != self._admitted_plan.signature()):
-            if cosines:  # recalibrate before re-admitting
-                self.plan = self.commander.propose(cosines)
-                self._admitted_plan = self.plan
-            else:
-                self.plan = self._admitted_plan
-            self._emit("readmitted")
-        return self.plan
+    def load_state_dict(self, state: dict) -> None:
+        self._impl.load_state_dict(state)

@@ -109,18 +109,27 @@ def run_training(task: ClassificationTask, *, policy: str = "fp32",
                  seed: int = 0, lr: Optional[float] = None,
                  momentum: float = 0.9, diagnose_at: Optional[int] = None,
                  degrade: Optional[tuple] = None, warmup_fp32: int = 50,
-                 plan_callback: Optional[Callable] = None) -> RunResult:
+                 plan_callback: Optional[Callable] = None,
+                 program=None) -> RunResult:
     """One training run under a (backbone, head) aggregation policy.
 
     ``policy`` applies to the backbone; ``head_policy`` (default = policy)
     to the classifier head — 'fp32' head + low-bit backbone is the paper's
     layer-aware operating point.  Every run begins with ``warmup_fp32``
     FP32 steps (paper Section 3: "Training begins on the FP32 bypass path")
-    before the selected policy is admitted.  ``plan_callback(step, loss)``
-    may return a (backbone, head) pair to change the policy online
-    (control-plane pilots).  ``degrade=(t0, t1)`` injects a gradient-
-    corruption window.
+    before the selected policy is admitted; the warm-up phase is a
+    :class:`repro.fabric.control.PolicyProgram` latching ``(backbone,
+    head)`` rule-name pairs, and ``program=`` may replace it with any
+    user-defined phase schedule (e.g. "head on FP32 after step N" via
+    ``PolicyProgram.staged``).  ``plan_callback(step, loss)`` may return
+    a (backbone, head) pair to change the policy online (control-plane
+    pilots).  ``degrade=(t0, t1)`` injects a gradient-corruption window.
     """
+    # control vocabulary lives in the fabric layer; imported lazily so
+    # `repro.core` stays importable standalone (no cycle: fabric.control
+    # imports core.admission/buckets, never this module)
+    from ..fabric.control import Phase, PolicyProgram, Telemetry
+
     head_policy = head_policy or policy
     params = init_mlp(jax.random.PRNGKey(seed), task.dim, hidden,
                       task.num_classes)
@@ -131,7 +140,15 @@ def run_training(task: ClassificationTask, *, policy: str = "fp32",
         return jax.vmap(lambda x, y: jax.grad(_ce)(p, x, y))(xs, ys)
 
     losses, cosines = [], None
-    cur = (policy, head_policy)
+    cur = {"plan": (policy, head_policy)}   # live latch payload
+    user_program = program is not None
+    if program is None:
+        program = PolicyProgram([
+            Phase("warmup", plan=("fp32", "fp32"),
+                  transition=lambda t, p: ("admit" if t.step >= warmup_fp32
+                                           else None)),
+            Phase("admit", plan=lambda t, p: cur["plan"], latch=False),
+        ])
     data = task.batches(batch, seed_offset=seed * 1000)
     rng_eval = np.random.RandomState(seed + 777)
     xe, ye = task.sample(rng_eval, 2048)
@@ -156,8 +173,8 @@ def run_training(task: ClassificationTask, *, policy: str = "fp32",
         if plan_callback is not None:
             nxt = plan_callback(step, loss)
             if nxt is not None:
-                cur = nxt
-        active = ("fp32", "fp32") if step < warmup_fp32 else cur
+                cur["plan"] = tuple(nxt)
+        active = tuple(program.advance(Telemetry(step=step, loss=loss)))
         bb_rule, hd_rule = RULES[active[0]], RULES[active[1]]
 
         if diagnose_at is not None and step == diagnose_at:
@@ -193,7 +210,10 @@ def run_training(task: ClassificationTask, *, policy: str = "fp32",
 
     acc = float(jnp.mean(jnp.argmax(
         mlp_logits(params, jnp.asarray(xe)), -1) == jnp.asarray(ye)))
-    return RunResult(policy=f"{cur[0]}+{cur[1]}head", final_acc=acc,
+    # label what actually ran: a user-supplied program owns the latch, so
+    # its final plan names the operating point, not the policy arguments
+    bb, hd = tuple(program.plan) if user_program else cur["plan"]
+    return RunResult(policy=f"{bb}+{hd}head", final_acc=acc,
                      traffic_ratio=traffic_acc / steps, losses=losses,
                      cosines=cosines)
 

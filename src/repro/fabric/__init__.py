@@ -7,11 +7,16 @@
     ``vote_psum``, ``packed_a2a``, plus the Section-9 baselines;
   * :mod:`session`  — the :class:`Fabric` session object owning worker
     count, policy resolution, EF state, registry dispatch, and the
-    per-plan jit cache.
+    per-plan jit cache;
+  * :mod:`control`  — the admission-control plane: :class:`Controller`
+    protocol + ``@register_controller`` registry (built-ins ``"paper"``,
+    ``"static"``, ``"fp32"``), the typed :class:`Telemetry` record, and
+    the :class:`PolicyProgram` phase machine.
 
 Quick use::
 
     fabric = Fabric(mesh, dp_axes=("data",))
+    fabric.attach_controller("paper", warmup_steps=50)     # admission policy
     step = fabric.step_for(cfg, optimizer, plan, params)   # cached jit
     agg, ef = fabric.aggregate(grads, plan, ef)            # in shard_map
 """
@@ -22,10 +27,21 @@ from . import backends as _backends          # registers the built-ins
 from .session import (CompiledStep, Fabric, TrainState, aggregate_leaf,
                       aggregate_tree, aggregate_tree_bucketed,
                       dp_num_workers)
+from .control import (Controller, ControlEvent, FP32Controller,
+                      PaperController, Phase, PolicyProgram,
+                      StaticController, Telemetry, available_controllers,
+                      get_controller, make_controller, plan_from_jsonable,
+                      plan_presets, plan_to_jsonable, register_controller,
+                      unregister_controller)
 
 __all__ = [
     "AggregationContext", "ScheduleBackend", "available_schedules",
     "get_schedule", "register_schedule", "unregister_schedule",
     "CompiledStep", "Fabric", "TrainState", "aggregate_leaf",
     "aggregate_tree", "aggregate_tree_bucketed", "dp_num_workers",
+    "Controller", "ControlEvent", "FP32Controller", "PaperController",
+    "Phase", "PolicyProgram", "StaticController", "Telemetry",
+    "available_controllers", "get_controller", "make_controller",
+    "plan_from_jsonable", "plan_presets", "plan_to_jsonable",
+    "register_controller", "unregister_controller",
 ]

@@ -1,0 +1,605 @@
+"""Controller registry + phase-program API for admission control.
+
+The paper's headline accuracy mechanism is its *control interface*:
+warm-up on FP32, layer-aware admission to G-Binary/G-Ternary, guarded
+recovery, re-admission (Sections 3 and 8).  This module makes that
+control plane a first-class, pluggable subsystem — the policy analogue
+of the schedule-backend registry in :mod:`repro.fabric.registry`:
+
+  * :class:`Telemetry` — the typed per-step record controllers observe
+    (step, loss, per-group cosines, traffic ratio, step wall-time,
+    restart flag).  One schema, emitted once per step by the Trainer
+    from the Fabric-compiled step's metrics — no more scraping
+    ``metrics["cos/{g}/gbinary"]`` by string key at call sites.
+  * :class:`Controller` protocol + ``@register_controller`` — policies
+    register under a string name and are constructed by
+    :func:`make_controller`; the Predictor/Commander/Supervisor ladder
+    ships as the built-in ``"paper"`` controller (alias ``"adaptive"``),
+    with trivial ``"static"`` and ``"fp32"`` controllers alongside it.
+  * :class:`PolicyProgram` — a declarative phase machine (warm-up ->
+    calibrate -> admit -> guarded-recovery -> re-admit, plus
+    user-defined stages such as "head on FP32 after step N") that owns
+    the mode latch and the control-event log.
+  * ``state_dict() / load_state_dict()`` on controllers, threaded
+    through :class:`repro.checkpoint.CheckpointManager`, so CUSUM
+    statistics, cooldown, and the admitted plan survive failure
+    recovery instead of resetting to warm-up.
+
+Controllers only ever *read* telemetry and *write* mode metadata (an
+:class:`~repro.core.buckets.AdmissionPlan`) — mirroring the paper's
+"the control plane writes only mode metadata; it does not inspect
+gradient payloads".  Attach one to a session with
+``fabric.attach_controller("paper", warmup_steps=50)`` so the
+plan-signature jit cache and the mode latch live in one object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Protocol, Sequence, \
+    runtime_checkable
+
+from ..core.admission import (Commander, ControlEvent, CusumGuard, Predictor,
+                              Supervisor)
+from ..core.buckets import AdmissionPlan, GroupPolicy
+from ..core.modes import AggregationMode, Schedule, schedule_name
+
+__all__ = [
+    "Controller", "ControlEvent", "FP32Controller", "PaperController",
+    "Phase", "PolicyProgram", "StaticController", "Telemetry",
+    "available_controllers", "get_controller", "make_controller",
+    "plan_from_jsonable", "plan_presets", "plan_to_jsonable",
+    "register_controller", "unregister_controller",
+]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: the typed per-step record controllers observe
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """One step of training-runtime telemetry, as the controller sees it.
+
+    ``cosines`` is ``group -> {"gbinary": cos, "gternary": cos}`` when the
+    step was compiled with diagnostics (calibration), else None.  The
+    record is the *only* channel between the runtime and a controller —
+    controllers never see gradients, weights, or the metrics dict.
+    """
+    step: int
+    loss: float
+    cosines: Mapping[str, Mapping[str, float]] | None = None
+    traffic_ratio: float | None = None
+    step_time_s: float | None = None
+    restart: bool = False
+    plan_signature: str | None = None
+
+    @staticmethod
+    def from_metrics(step: int, metrics: Mapping[str, Any], *,
+                     step_time_s: float | None = None,
+                     restart: bool = False) -> "Telemetry":
+        """Adapt one compiled-step metrics dict into a Telemetry record.
+
+        The single sanctioned place where ``cos/{group}/{mode}`` metric
+        keys are parsed — every consumer above this line works with the
+        typed record.
+        """
+        cosines: dict[str, dict[str, float]] = {}
+        for k, v in metrics.items():
+            if k.startswith("cos/"):
+                _, group, mode = k.split("/", 2)
+                cosines.setdefault(group, {})[mode] = float(v)
+        tr = metrics.get("traffic_ratio")
+        return Telemetry(step=int(step), loss=float(metrics["loss"]),
+                         cosines=cosines or None,
+                         traffic_ratio=None if tr is None else float(tr),
+                         step_time_s=step_time_s, restart=restart,
+                         plan_signature=metrics.get("plan"))
+
+
+# ---------------------------------------------------------------------------
+# plan (de)serialization — controllers checkpoint their latched plans
+# ---------------------------------------------------------------------------
+
+_PLAN_TAG = "__admission_plan__"
+_TUPLE_TAG = "__tuple__"
+
+
+def plan_to_jsonable(plan: AdmissionPlan) -> dict:
+    """AdmissionPlan -> JSON-serializable dict (for checkpoint manifests)."""
+    def enc(p: GroupPolicy) -> dict:
+        return {"mode": p.mode.value,
+                "schedule": (None if p.schedule is None
+                             else schedule_name(p.schedule)),
+                "error_feedback": bool(p.error_feedback)}
+    return {_PLAN_TAG: {
+        "policies": [[g, enc(p)] for g, p in plan.policies],
+        "default": enc(plan.default)}}
+
+
+def plan_from_jsonable(obj: dict) -> AdmissionPlan:
+    """Inverse of :func:`plan_to_jsonable`; signature-preserving."""
+    body = obj[_PLAN_TAG]
+
+    def dec(d: dict) -> GroupPolicy:
+        sched = d["schedule"]
+        if sched is not None:
+            try:                       # built-in enum if it is one, else the
+                sched = Schedule(sched)  # registered custom-backend name
+            except ValueError:
+                pass
+        return GroupPolicy(AggregationMode(d["mode"]), sched,
+                           bool(d["error_feedback"]))
+
+    return AdmissionPlan(
+        policies=tuple((g, dec(p)) for g, p in body["policies"]),
+        default=dec(body["default"]))
+
+
+def _payload_to_jsonable(plan: Any) -> Any:
+    """Latch payload -> JSON.  PolicyProgram latches are usually
+    AdmissionPlans, but the phase machine is payload-agnostic (the
+    experiments harness latches (backbone, head) rule-name pairs)."""
+    if isinstance(plan, AdmissionPlan):
+        return plan_to_jsonable(plan)
+    if isinstance(plan, tuple):
+        return {_TUPLE_TAG: list(plan)}
+    return plan
+
+
+def _payload_from_jsonable(obj: Any) -> Any:
+    if isinstance(obj, dict) and _PLAN_TAG in obj:
+        return plan_from_jsonable(obj)
+    if isinstance(obj, dict) and _TUPLE_TAG in obj:
+        return tuple(obj[_TUPLE_TAG])
+    return obj
+
+
+def _sig(plan: Any) -> str:
+    return plan.signature() if hasattr(plan, "signature") else repr(plan)
+
+
+_FP32_SIG = AdmissionPlan.fp32_all().signature()
+
+
+# ---------------------------------------------------------------------------
+# named plan presets (shared by launch/train and launch/dryrun)
+# ---------------------------------------------------------------------------
+
+def plan_presets(error_feedback: bool = False) -> dict[str, AdmissionPlan]:
+    """Canonical named plans, one source for every launcher / CLI.
+
+    ``gbin_vote``/``gter_vote`` pin the paper-faithful dense int8 vote
+    schedule; ``*_packed`` pin the packed controller schedule on the ICI;
+    ``gbin_packed_embed`` additionally admits the (huge) embedding tables
+    while keeping head+norms on FP32 (validated in the convergence
+    bench).  Mode-default-schedule presets (``gbin_backbone`` etc.) leave
+    the schedule to :data:`~repro.core.modes.DEFAULT_SCHEDULE`.
+    """
+    ef = error_feedback
+    packed = Schedule.PACKED_A2A
+    return {
+        "fp32": AdmissionPlan.fp32_all(),
+        "gbin_backbone": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_BINARY, error_feedback=ef),
+        "gbin_vote": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_BINARY, schedule=Schedule.VOTE_PSUM,
+            error_feedback=ef),
+        "gbin_packed": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_BINARY, schedule=packed, error_feedback=ef),
+        "gter_backbone": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_TERNARY, error_feedback=ef),
+        "gter_vote": AdmissionPlan.lowbit_backbone(
+            AggregationMode.G_TERNARY, schedule=Schedule.VOTE_PSUM,
+            error_feedback=ef),
+        "lowbit_all": AdmissionPlan.lowbit_all(
+            AggregationMode.G_BINARY, error_feedback=ef),
+        "gbin_packed_all": AdmissionPlan.lowbit_all(
+            AggregationMode.G_BINARY, schedule=packed, error_feedback=ef),
+        "gbin_packed_embed": AdmissionPlan.from_dict(
+            {"backbone": GroupPolicy(AggregationMode.G_BINARY, packed, ef),
+             "embed": GroupPolicy(AggregationMode.G_BINARY, packed, ef)},
+            default=GroupPolicy(AggregationMode.FP32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the PolicyProgram phase machine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One named phase of a :class:`PolicyProgram`.
+
+    ``plan``       — the latch payload while in this phase: a static value,
+                     a callable ``(telemetry, program) -> payload``, or
+                     None to keep the previous latch.
+    ``transition`` — ``(telemetry, program) -> next_phase_name | None``;
+                     None means the phase never self-advances (it can
+                     still be left via :meth:`PolicyProgram.enter` —
+                     e.g. a supervisor interrupt).
+    ``latch``      — callable plans are evaluated once on phase entry
+                     (True, the default: admission proposals) or on every
+                     advance (False: live payloads such as the
+                     experiments harness's mutable rule pair).
+    ``event``      — control-event kind emitted on entry (default: the
+                     phase name).
+    """
+    name: str
+    plan: Any = None
+    transition: Callable[["Telemetry", "PolicyProgram"],
+                         str | None] | None = None
+    latch: bool = True
+    event: str | None = None
+
+
+class PolicyProgram:
+    """Declarative phase machine owning the mode latch + event log.
+
+    ``events`` is a *transition* log: one :class:`ControlEvent` per phase
+    entered after the start phase (matching the legacy ControlPlane,
+    which never logged the initial warm-up phase); the current phase is
+    always available as ``program.phase`` / in ``state_dict()``.
+
+    ``advance(telemetry)`` evaluates the current phase's transition
+    (chaining through consecutive transitions that fire on the same
+    telemetry — e.g. warm-up ending exactly when calibration cosines
+    arrive) and returns the latched plan for the *next* step.
+    ``enter(name, telemetry)`` force-jumps to a phase, which is how
+    event-driven interrupts (the Supervisor's guarded recovery) compose
+    with the declarative nominal flow.
+    """
+
+    def __init__(self, phases: Sequence[Phase], *, start: str | None = None,
+                 plan: Any = None):
+        if not phases:
+            raise ValueError("PolicyProgram needs at least one phase")
+        self.phases: dict[str, Phase] = {}
+        for p in phases:
+            if p.name in self.phases:
+                raise ValueError(f"duplicate phase name {p.name!r}")
+            self.phases[p.name] = p
+        self.phase = start if start is not None else phases[0].name
+        if self.phase not in self.phases:
+            raise ValueError(f"unknown start phase {self.phase!r}; have "
+                             f"{sorted(self.phases)}")
+        first = self.phases[self.phase]
+        if first.plan is not None and not callable(first.plan):
+            plan = first.plan
+        self.plan = plan
+        # a latched callable on the start phase needs telemetry to
+        # evaluate; do it once on the first advance (until then, the
+        # constructor's `plan=` fallback is the latch)
+        self._entry_pending = (first.plan is not None
+                               and callable(first.plan) and first.latch)
+        self.entered_step = 0
+        self.events: list[ControlEvent] = []
+
+    def enter(self, name: str, telemetry: Telemetry | None = None) -> None:
+        """Force a transition into ``name`` (emits its entry event).
+
+        ``telemetry`` may be omitted only for phases whose plan is static
+        (or None): a callable plan is computed *from* telemetry.
+        """
+        try:
+            ph = self.phases[name]
+        except KeyError:
+            raise KeyError(f"unknown phase {name!r}; have "
+                           f"{sorted(self.phases)}") from None
+        if callable(ph.plan) and telemetry is None:
+            raise ValueError(
+                f"entering phase {name!r} requires telemetry: its plan is "
+                f"computed from the telemetry record")
+        self.phase = name
+        self._entry_pending = False
+        if telemetry is not None:
+            self.entered_step = telemetry.step
+        if ph.plan is not None:
+            self.plan = (ph.plan(telemetry, self) if callable(ph.plan)
+                         else ph.plan)
+        self.events.append(ControlEvent(self.entered_step,
+                                        ph.event or ph.name,
+                                        _sig(self.plan)))
+
+    def advance(self, telemetry: Telemetry) -> Any:
+        """One step of policy; returns the latched plan for the next step."""
+        first = True
+        for _ in range(len(self.phases) + 1):
+            ph = self.phases[self.phase]
+            # live (latch=False) plans re-evaluate every advance, and a
+            # start phase's latched callable evaluates on first advance;
+            # phases just entered via enter() were already evaluated there
+            if (first and ph.plan is not None and callable(ph.plan)
+                    and (not ph.latch or self._entry_pending)):
+                self.plan = ph.plan(telemetry, self)
+            self._entry_pending = first = False
+            nxt = ph.transition(telemetry, self) if ph.transition else None
+            if nxt is None or nxt == self.phase:
+                return self.plan
+            self.enter(nxt, telemetry)
+        raise RuntimeError(
+            f"phase transitions did not settle after visiting every phase "
+            f"once (cycle through {sorted(self.phases)}?)")
+
+    @staticmethod
+    def staged(stages: Sequence[tuple[str, Any, int | None]]
+               ) -> "PolicyProgram":
+        """Linear step-bounded program: ``[(name, plan, until_step), ...]``.
+
+        Each stage latches ``plan`` and advances to the next stage at the
+        first telemetry with ``step >= until_step`` (None = terminal).
+        The paper's "head on FP32 after step N" style user phases are one
+        call::
+
+            PolicyProgram.staged([
+                ("all_lowbit", lowbit_all_plan, 200),
+                ("head_fp32", lowbit_backbone_plan, None)])
+        """
+        names = [s[0] for s in stages]
+        phases = []
+        for i, (name, plan, until) in enumerate(stages):
+            transition = None
+            if until is not None and i + 1 < len(stages):
+                def transition(t, p, _until=until, _next=names[i + 1]):
+                    return _next if t.step >= _until else None
+            phases.append(Phase(name, plan=plan, transition=transition))
+        return PolicyProgram(phases)
+
+    # -- persistence -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {"phase": self.phase,
+                "entered_step": self.entered_step,
+                "plan": _payload_to_jsonable(self.plan),
+                "events": [[e.step, e.kind, e.plan_signature]
+                           for e in self.events]}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state["phase"] not in self.phases:
+            raise ValueError(f"checkpointed phase {state['phase']!r} not in "
+                             f"this program ({sorted(self.phases)})")
+        self.phase = state["phase"]
+        self._entry_pending = False       # the latch itself was restored
+        self.entered_step = int(state["entered_step"])
+        self.plan = _payload_from_jsonable(state["plan"])
+        self.events = [ControlEvent(int(s), k, sig)
+                       for s, k, sig in state["events"]]
+
+
+# ---------------------------------------------------------------------------
+# Controller protocol + registry (mirrors @register_schedule)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Controller(Protocol):
+    """Protocol every registered controller implements.
+
+    ``observe`` consumes one :class:`Telemetry` record and returns the
+    :class:`AdmissionPlan` to latch for the *next* step; ``plan`` is the
+    current latch.  Optional surface the runtime uses when present:
+    ``wants_diagnostics`` (compile the step with cosine diagnostics while
+    True), ``state_dict()/load_state_dict()`` (checkpoint threading via
+    :class:`~repro.checkpoint.CheckpointManager`), and ``events`` (the
+    control-event log).
+    """
+
+    name: str
+    plan: AdmissionPlan
+
+    def observe(self, telemetry: Telemetry) -> AdmissionPlan: ...
+
+
+_CONTROLLERS: dict[str, Callable[..., Any]] = {}
+
+
+def register_controller(name: str, *aliases: str, override: bool = False):
+    """Class/factory decorator registering a controller under ``name``.
+
+    Unlike schedule backends (stateless, registered as instances),
+    controllers are *stateful*: the registry holds factories and
+    :func:`make_controller` constructs a fresh instance per call.
+    ``aliases`` register the same factory under extra names;
+    re-registering an existing name raises unless ``override=True``.
+    """
+    keys = [str(k) for k in (name, *aliases)]
+
+    def deco(factory):
+        if not override:
+            # validate every key before inserting any, so a clash on an
+            # alias cannot leave the registry half-registered
+            for key in keys:
+                if key in _CONTROLLERS:
+                    raise ValueError(
+                        f"controller {key!r} already registered "
+                        f"({_CONTROLLERS[key].__name__}); pass "
+                        f"override=True to replace it")
+        for key in keys:
+            _CONTROLLERS[key] = factory
+        return factory
+
+    return deco
+
+
+def unregister_controller(name: str) -> None:
+    """Remove a controller factory and all its aliases (for tests
+    tearing down toys — a leftover alias would make the original
+    ``@register_controller(name, *aliases)`` unrepeatable)."""
+    factory = _CONTROLLERS.pop(str(name), None)
+    if factory is not None:
+        for alias in [k for k, v in _CONTROLLERS.items() if v is factory]:
+            del _CONTROLLERS[alias]
+
+
+def get_controller(name: str) -> Callable[..., Any]:
+    """Resolve a controller name to its registered factory."""
+    key = str(name)
+    try:
+        return _CONTROLLERS[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown controller {key!r}; available: "
+            f"{available_controllers()}. Register one with "
+            f"@register_controller({key!r}).") from None
+
+
+def make_controller(name: str, **kwargs) -> Any:
+    """Construct a fresh controller instance from its registered name."""
+    return get_controller(name)(**kwargs)
+
+
+def available_controllers() -> tuple[str, ...]:
+    return tuple(sorted(_CONTROLLERS))
+
+
+# ---------------------------------------------------------------------------
+# built-in controllers
+# ---------------------------------------------------------------------------
+
+@register_controller("static")
+class StaticController:
+    """Fixed-plan controller: always latches the plan it was built with.
+
+    ``plan`` may be an :class:`AdmissionPlan` or the name of a
+    :func:`plan_presets` entry.  Drives the Trainer through the exact
+    same path as the adaptive controllers — bit-identical history to the
+    legacy ``Trainer(..., plan=...)`` static case.
+    """
+
+    name = "static"
+    wants_diagnostics = False
+
+    def __init__(self, plan: AdmissionPlan | str | None = None):
+        if isinstance(plan, str):
+            presets = plan_presets()
+            if plan not in presets:
+                raise KeyError(f"unknown plan preset {plan!r}; available: "
+                               f"{tuple(sorted(presets))}")
+            plan = presets[plan]
+        self.plan = plan if plan is not None else AdmissionPlan.fp32_all()
+        self.events: list[ControlEvent] = []
+
+    def observe(self, telemetry: Telemetry) -> AdmissionPlan:
+        return self.plan
+
+    def state_dict(self) -> dict:
+        return {"plan": plan_to_jsonable(self.plan)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.plan = plan_from_jsonable(state["plan"])
+
+
+@register_controller("fp32")
+class FP32Controller(StaticController):
+    """Everything on the FP32 bypass path, forever (baseline runs)."""
+
+    name = "fp32"
+
+    def __init__(self):
+        super().__init__(AdmissionPlan.fp32_all())
+
+
+@register_controller("paper", "adaptive")
+class PaperController:
+    """The paper's Predictor/Commander/Supervisor ladder as a controller.
+
+    Phase program (Sections 3 and 8)::
+
+        warmup ──(warmup_steps observed)──> calibrate ──(cosines)──> admitted
+           admitted/readmitted ──(CUSUM trigger)──> recovery
+           recovery ──(cooldown over)──> readmitted
+
+    Warm-up and calibration are separate phases on purpose: admission
+    *retries* while calibration cosines are pending instead of being a
+    one-shot window at exactly ``step == warmup_steps`` (the old dual
+    warm-up-knob failure mode, where a Trainer/plane disagreement made
+    admission silently never fire).  The guarded-recovery interrupt is
+    event-driven (the Supervisor can fire in any admitted phase); the
+    nominal flow is declarative.
+    """
+
+    name = "paper"
+
+    def __init__(self, commander: Commander | None = None,
+                 supervisor: Supervisor | None = None,
+                 predictor: Predictor | None = None,
+                 warmup_steps: int = 20):
+        self.commander = commander or Commander()
+        self.supervisor = supervisor or Supervisor()
+        self.predictor = predictor
+        self.warmup_steps = int(warmup_steps)
+        self._observed = 0
+        self._admitted_plan: AdmissionPlan | None = None
+        self.program = PolicyProgram([
+            Phase("warmup", plan=AdmissionPlan.fp32_all(),
+                  transition=self._warmup_done),
+            Phase("calibrate", transition=self._calibrated,
+                  event="warmup_end"),
+            Phase("admitted", plan=self._propose),
+            Phase("recovery", plan=AdmissionPlan.fp32_all(),
+                  transition=self._cooldown_over),
+            Phase("readmitted", plan=self._repropose),
+        ], plan=AdmissionPlan.fp32_all())
+
+    # -- phase transitions / latches ------------------------------------
+
+    def _warmup_done(self, t: Telemetry, prog: PolicyProgram) -> str | None:
+        return "calibrate" if self._observed >= self.warmup_steps else None
+
+    def _calibrated(self, t: Telemetry, prog: PolicyProgram) -> str | None:
+        return "admitted" if t.cosines else None
+
+    def _cooldown_over(self, t: Telemetry, prog: PolicyProgram) -> str | None:
+        return None if self.supervisor.in_cooldown else "readmitted"
+
+    def _propose(self, t: Telemetry, prog: PolicyProgram) -> AdmissionPlan:
+        self._admitted_plan = self.commander.propose(t.cosines)
+        return self._admitted_plan
+
+    def _repropose(self, t: Telemetry, prog: PolicyProgram) -> AdmissionPlan:
+        if t.cosines:              # recalibrate before re-admitting
+            return self._propose(t, prog)
+        return self._admitted_plan
+
+    # -- Controller surface ---------------------------------------------
+
+    @property
+    def plan(self) -> AdmissionPlan:
+        return self.program.plan
+
+    @property
+    def events(self) -> list[ControlEvent]:
+        return self.program.events
+
+    @property
+    def wants_diagnostics(self) -> bool:
+        """Keep the compiled step emitting cosines until admission."""
+        return self.program.phase in ("warmup", "calibrate")
+
+    def observe(self, telemetry: Telemetry) -> AdmissionPlan:
+        self._observed += 1
+        recovering = self.supervisor.observe(telemetry.loss)
+        if recovering and _sig(self.plan) != _FP32_SIG:
+            self.program.enter("recovery", telemetry)
+            return self.plan
+        return self.program.advance(telemetry)
+
+    # -- persistence (threaded through CheckpointManager) ---------------
+
+    def state_dict(self) -> dict:
+        return {"observed": self._observed,
+                "warmup_steps": self.warmup_steps,
+                "admitted_plan": (None if self._admitted_plan is None
+                                  else plan_to_jsonable(self._admitted_plan)),
+                "supervisor": self.supervisor.state_dict(),
+                "program": self.program.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._observed = int(state["observed"])
+        # the checkpointed calibration window wins over the constructor's:
+        # a restart launched with a different --warmup-steps must not cut
+        # the restored run's warm-up short (or stretch it)
+        self.warmup_steps = int(state.get("warmup_steps",
+                                          self.warmup_steps))
+        ap = state["admitted_plan"]
+        self._admitted_plan = None if ap is None else plan_from_jsonable(ap)
+        self.supervisor.load_state_dict(state["supervisor"])
+        self.program.load_state_dict(state["program"])

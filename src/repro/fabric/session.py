@@ -299,8 +299,32 @@ class Fabric:
             self.num_workers = 1
         self.bucket_bytes = int(bucket_bytes)
         self.fused = bool(fused)
+        self.controller = None           # attached admission controller
         self._compiled: dict[tuple, CompiledStep] = {}
         self._layouts: dict[tuple, BucketLayout] = {}
+
+    # -- admission controller -------------------------------------------
+
+    def attach_controller(self, controller, **kwargs):
+        """Attach an admission controller to this session.
+
+        ``controller`` is either a :class:`repro.fabric.control.Controller`
+        instance or a name registered via ``@register_controller``
+        (``kwargs`` then go to the factory, e.g.
+        ``fabric.attach_controller("paper", warmup_steps=50)``).  The
+        session is the natural owner: the controller's mode latch and the
+        per-plan-signature jit cache (the XLA analogue of that latch)
+        then live in one object, and a Trainer built on this session
+        picks the controller up automatically.  Returns the controller.
+        """
+        from .control import make_controller
+        if isinstance(controller, str):
+            controller = make_controller(controller, **kwargs)
+        elif kwargs:
+            raise TypeError("factory kwargs are only valid when attaching "
+                            "a controller by registered name")
+        self.controller = controller
+        return controller
 
     # -- context / policy resolution ------------------------------------
 

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCH_IDS, get_config
-from ..core import AdmissionPlan, AggregationMode, GroupPolicy, Schedule
+from ..fabric.control import plan_presets
 from ..models import SHAPES, SHAPES_BY_NAME, init_cache
 from ..optim import AdamW
 from .hlo_analysis import (parse_collectives, roofline_terms,
@@ -28,29 +28,9 @@ from .hlo_walk import walk
 from .mesh import dp_axes_of, make_production_mesh
 from .specs import input_specs, state_specs, train_batch_specs
 
-PLANS = {
-    "fp32": AdmissionPlan.fp32_all(),
-    # paper-faithful baseline: low-bit backbone + FP32 head (Table 6 row 4),
-    # dense int8 vote schedule (communication-equivalent semantics)
-    "gbin_vote": AdmissionPlan.lowbit_backbone(
-        AggregationMode.G_BINARY, schedule=Schedule.VOTE_PSUM),
-    # beyond-paper: packed controller schedule on the ICI
-    "gbin_packed": AdmissionPlan.lowbit_backbone(
-        AggregationMode.G_BINARY, schedule=Schedule.PACKED_A2A),
-    "gter_vote": AdmissionPlan.lowbit_backbone(
-        AggregationMode.G_TERNARY, schedule=Schedule.VOTE_PSUM),
-    "gbin_packed_all": AdmissionPlan.lowbit_all(
-        AggregationMode.G_BINARY, schedule=Schedule.PACKED_A2A),
-    # beyond-paper: admit the (huge) embedding tables too; keeps head+norms
-    # on FP32 (embeddings are magnitude-tolerant lookup rows, unlike the
-    # classifier head — validated in the convergence bench)
-    "gbin_packed_embed": AdmissionPlan.from_dict(
-        {"backbone": GroupPolicy(AggregationMode.G_BINARY,
-                                 Schedule.PACKED_A2A),
-         "embed": GroupPolicy(AggregationMode.G_BINARY,
-                              Schedule.PACKED_A2A)},
-        default=GroupPolicy(AggregationMode.FP32)),
-}
+#: one source of named plans for every launcher (repro.fabric.control);
+#: the dry-run compiles any subset of them per (arch x shape x mesh) cell
+PLANS = plan_presets()
 
 
 def cell_skipped(cfg, cell) -> str | None:

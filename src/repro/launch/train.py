@@ -10,11 +10,21 @@ data layers are already host-indexed).  Examples:
       --mesh 4,2 --steps 100 --plan gbin_backbone
 
   # adaptive control plane (warm-up -> calibrate -> admit -> guarded):
-  ... --plan adaptive
+  ... --plan adaptive          # equivalent: --controller paper
+
+Plan names resolve through ``repro.fabric.control.plan_presets`` (the
+same table the dry-run uses); ``--controller`` accepts any name in the
+``@register_controller`` registry.
 """
 import argparse
 import logging
 import os
+
+#: preset names, hardcoded so --help works without importing jax;
+#: validated against plan_presets() at startup
+_PLAN_CHOICES = ["fp32", "gbin_backbone", "gbin_vote", "gbin_packed",
+                 "gter_backbone", "gter_vote", "lowbit_all",
+                 "gbin_packed_all", "gbin_packed_embed", "adaptive"]
 
 
 def main():
@@ -27,9 +37,12 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--plan", default="gbin_backbone",
-                    choices=["fp32", "gbin_backbone", "gbin_packed",
-                             "gter_backbone", "lowbit_all", "adaptive"])
+    ap.add_argument("--plan", default="gbin_backbone", choices=_PLAN_CHOICES)
+    ap.add_argument("--controller", default=None,
+                    help="registered admission controller driving the run "
+                         "(e.g. paper, static, fp32); overrides --plan")
+    ap.add_argument("--warmup-steps", type=int, default=20,
+                    help="FP32 calibration window of the paper controller")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
@@ -49,10 +62,9 @@ def main():
     from jax.sharding import AxisType
 
     from ..configs import get_config
-    from ..core import (AdmissionPlan, AggregationMode, Commander,
-                        ControlPlane, Schedule, Supervisor)
     from ..data import SyntheticLMStream
     from ..fabric import Fabric
+    from ..fabric.control import plan_presets
     from ..optim import AdamW, SgdMomentum
     from ..runtime import Trainer, TrainerConfig
 
@@ -72,30 +84,28 @@ def main():
     opt_cls = AdamW if args.optimizer == "adamw" else SgdMomentum
     optimizer = opt_cls(peak_lr=args.lr, total_steps=args.steps)
 
-    ef = args.error_feedback
-    plans = {
-        "fp32": AdmissionPlan.fp32_all(),
-        "gbin_backbone": AdmissionPlan.lowbit_backbone(
-            AggregationMode.G_BINARY, error_feedback=ef),
-        "gbin_packed": AdmissionPlan.lowbit_backbone(
-            AggregationMode.G_BINARY, schedule=Schedule.PACKED_A2A,
-            error_feedback=ef),
-        "gter_backbone": AdmissionPlan.lowbit_backbone(
-            AggregationMode.G_TERNARY, error_feedback=ef),
-        "lowbit_all": AdmissionPlan.lowbit_all(
-            AggregationMode.G_BINARY, error_feedback=ef),
-    }
-    control = plan = None
-    if args.plan == "adaptive":
-        control = ControlPlane(commander=Commander(),
-                               supervisor=Supervisor(), warmup_steps=20)
+    plans = plan_presets(error_feedback=args.error_feedback)
+    assert set(_PLAN_CHOICES) == set(plans) | {"adaptive"}, \
+        "launcher plan choices drifted from plan_presets()"
+
+    fabric = Fabric(mesh, dp_axes)
+    plan = None
+    controller_name = args.controller or (
+        "paper" if args.plan == "adaptive" else None)
+    if controller_name in ("paper", "adaptive"):
+        fabric.attach_controller(controller_name,
+                                 warmup_steps=args.warmup_steps)
+    elif controller_name == "static":
+        if args.plan == "adaptive":
+            ap.error("--controller static needs a concrete --plan preset")
+        fabric.attach_controller("static", plan=plans[args.plan])
+    elif controller_name is not None:
+        fabric.attach_controller(controller_name)
     else:
         plan = plans[args.plan]
 
-    fabric = Fabric(mesh, dp_axes)
     trainer = Trainer(
-        cfg, mesh, optimizer, data, plan=plan, control=control,
-        fabric=fabric,
+        cfg, mesh, optimizer, data, plan=plan, fabric=fabric,
         tcfg=TrainerConfig(dp_axes=dp_axes,
                            checkpoint_interval=args.ckpt_interval),
         ckpt_dir=args.ckpt_dir, seed=args.seed)

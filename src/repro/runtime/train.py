@@ -14,10 +14,14 @@ The train step is the integration point of the whole system (DESIGN.md §4):
   * one compiled step per AdmissionPlan signature, cached inside the
     Fabric — the XLA analogue of the paper's controller mode latch.
 
-The Trainer owns the host-side control loop: warm-up/calibration, the
-Predictor/Commander/Supervisor control plane, checkpointing, failure
-recovery, and the straggler watchdog.  Step compilation and aggregation
-policy live in the Fabric session it drives.
+The Trainer owns the host-side control loop: checkpointing, failure
+recovery, the straggler watchdog, and — via an attached
+:class:`repro.fabric.control.Controller` — the admission-control plane.
+Each step it emits one typed :class:`~repro.fabric.control.Telemetry`
+record (built from the Fabric-compiled step's metrics) to the
+controller, which owns warm-up/calibration/admission/recovery policy and
+the mode latch.  Step compilation and aggregation policy live in the
+Fabric session it drives.
 """
 from __future__ import annotations
 
@@ -28,10 +32,10 @@ from typing import Any, Callable, Iterator
 import jax
 import jax.numpy as jnp
 
-from ..core import (AdmissionPlan, ControlPlane, GroupRules,
-                    plan_traffic_ratio)
+from ..core import AdmissionPlan, GroupRules, plan_traffic_ratio
 from ..checkpoint import CheckpointManager
 from ..fabric import CompiledStep, Fabric, TrainState, dp_num_workers
+from ..fabric.control import Telemetry, make_controller
 from ..fabric.session import _named
 from ..models import ModelConfig, init_params, param_pspecs
 from ..optim import Optimizer
@@ -76,7 +80,12 @@ def build_train_step(cfg: ModelConfig, mesh, optimizer: Optimizer,
 @dataclasses.dataclass
 class TrainerConfig:
     dp_axes: tuple = ("data",)
-    warmup_steps: int = 20            # FP32 calibration window
+    #: deprecated — warm-up/calibration length is owned by the attached
+    #: controller (e.g. ``make_controller("paper", warmup_steps=N)``);
+    #: the value here is accepted for backward compatibility and ignored,
+    #: which removes the old dual-knob failure mode where a disagreement
+    #: between Trainer and control plane made admission silently never fire.
+    warmup_steps: int | None = None
     checkpoint_interval: int = 100
     checkpoint_keep: int = 3
     log_interval: int = 10
@@ -91,12 +100,20 @@ class Trainer:
     ``fabric=`` to share schedule backends / compiled-step caches across
     components, or let the Trainer construct its own from ``mesh`` and
     ``tcfg.dp_axes``.
+
+    Admission control is a pluggable controller: pass ``controller=``
+    (an instance or a ``@register_controller`` name), attach one to the
+    session beforehand (``fabric.attach_controller(...)``), or pass a
+    legacy ``control=ControlPlane(...)`` — all three drive the same
+    telemetry -> observe -> latch path.  ``plan=`` without a controller
+    is the static fast path (bit-identical to pre-controller behaviour).
     """
 
     def __init__(self, cfg: ModelConfig, mesh, optimizer: Optimizer,
                  data: Iterator[dict], *,
-                 tcfg: TrainerConfig = TrainerConfig(),
-                 control: ControlPlane | None = None,
+                 tcfg: TrainerConfig | None = None,
+                 controller=None,
+                 control=None,
                  plan: AdmissionPlan | None = None,
                  rules: GroupRules | None = None,
                  fabric: Fabric | None = None,
@@ -104,6 +121,11 @@ class Trainer:
                  failure_injector: FailureInjector | None = None,
                  loss: Callable | None = None,
                  seed: int = 0):
+        if tcfg is None:
+            # fresh per-Trainer config (a dataclass default instance would
+            # be shared across every Trainer constructed without one)
+            tcfg = TrainerConfig(dp_axes=(fabric.dp_axes if fabric is not None
+                                          else ("data",)))
         if fabric is None:
             fabric = Fabric(mesh, tcfg.dp_axes, rules=rules)
         else:
@@ -124,7 +146,25 @@ class Trainer:
         self.cfg, self.mesh, self.optimizer = cfg, fabric.mesh, optimizer
         self.tcfg = tcfg
         self.rules = fabric.rules
-        self.control = control
+        # controller resolution: explicit argument (new `controller=` or
+        # legacy `control=`, a ControlPlane shim also satisfies the
+        # protocol) > the session's attached controller
+        if controller is not None and control is not None:
+            raise ValueError("pass either controller= or the deprecated "
+                             "control=, not both")
+        controller = controller if controller is not None else control
+        if isinstance(controller, str):
+            controller = make_controller(controller)
+        if controller is None:
+            controller = fabric.controller
+        elif fabric.controller is not None \
+                and fabric.controller is not controller:
+            raise ValueError("controller argument conflicts with the "
+                             "controller already attached to this fabric")
+        else:
+            fabric.attach_controller(controller)
+        self.controller = controller
+        self.control = controller          # backward-compatible alias
         self.static_plan = plan
         self.data = data
         self.loss = loss
@@ -140,6 +180,7 @@ class Trainer:
         self.restarts = 0
         self.traffic_log: list[float] = []
         self._sizes = None
+        self._just_restarted = False
 
     # -- state ----------------------------------------------------------
     def init_state(self) -> TrainState:
@@ -158,8 +199,8 @@ class Trainer:
         return self.state
 
     def _current_plan(self) -> AdmissionPlan:
-        if self.control is not None:
-            return self.control.plan
+        if self.controller is not None:
+            return self.controller.plan
         return self.static_plan or AdmissionPlan.fp32_all()
 
     def _get_step(self, plan: AdmissionPlan, diagnostics: bool):
@@ -176,12 +217,14 @@ class Trainer:
                 restored = None
                 try:
                     self.init_state()
-                    restored = self.ckpt.restore(self.state)
+                    restored = self.ckpt.restore(self.state,
+                                                 controller=self.controller)
                 except FileNotFoundError:
                     restored = None
                 if restored is not None:
                     step, tree, _ = restored
                     self.state = tree
+                    self._just_restarted = True
                     log.info("restored checkpoint at step %d", step)
             else:
                 self.init_state()
@@ -200,19 +243,27 @@ class Trainer:
                 self._recover()
                 done = int(self.state.step)
         if self.ckpt is not None:
-            self.ckpt.maybe_save(int(self.state.step), self.state, force=True)
+            self.ckpt.maybe_save(int(self.state.step), self.state, force=True,
+                                 controller=self.controller)
             self.ckpt.wait()
         return self.history
 
     def _recover(self):
-        """Node-failure recovery: restore last durable checkpoint."""
+        """Node-failure recovery: restore last durable checkpoint.
+
+        The controller is restored alongside the model state, so CUSUM
+        statistics, the Supervisor cooldown, and the admitted plan pick
+        up where the checkpoint left them instead of resetting the
+        control plane to warm-up.
+        """
         if self.ckpt is None:
             raise RuntimeError("failure without checkpointing enabled")
-        restored = self.ckpt.restore(self.state)
+        restored = self.ckpt.restore(self.state, controller=self.controller)
         if restored is None:
             self.init_state()
         else:
             _, self.state, _ = restored
+        self._just_restarted = True
 
     def _run_until(self, num_steps: int, it: Iterator[dict]) -> int:
         while int(self.state.step) < num_steps:
@@ -221,8 +272,11 @@ class Trainer:
                 self.failure_injector.check(step)
 
             plan = self._current_plan()
-            calibrating = (self.control is not None
-                           and step < self.tcfg.warmup_steps)
+            # the controller owns the calibration window (single source of
+            # truth for warm-up length): compile with diagnostics while it
+            # asks for them, so admission can retry until cosines land
+            calibrating = bool(self.controller is not None and getattr(
+                self.controller, "wants_diagnostics", False))
             jitted, b_sh = self._get_step(plan, calibrating)
             if hasattr(self.data, "batch_at"):   # deterministic replay
                 batch = self.data.batch_at(step)
@@ -242,17 +296,17 @@ class Trainer:
             self.traffic_log.append(metrics["traffic_ratio"])
             self.history.append(metrics)
 
-            if self.control is not None:
-                cos = None
-                if calibrating and step == self.tcfg.warmup_steps - 1:
-                    cos = {g: {"gbinary": metrics.get(f"cos/{g}/gbinary", 0.0),
-                               "gternary": metrics.get(f"cos/{g}/gternary", 0.0)}
-                           for g in self._sizes}
-                self.control.step(metrics["loss"], cosines=cos)
+            if self.controller is not None:
+                telemetry = Telemetry.from_metrics(
+                    step, metrics, step_time_s=t.duration,
+                    restart=self._just_restarted)
+                self._just_restarted = False
+                self.controller.observe(telemetry)
 
             if self.ckpt is not None:
                 self.ckpt.maybe_save(step + 1, self.state,
-                                     extra={"plan": plan.signature()})
+                                     extra={"plan": plan.signature()},
+                                     controller=self.controller)
             if step % self.tcfg.log_interval == 0:
                 log.info("step %d loss %.4f traffic %.4f plan=%s", step,
                          metrics["loss"], metrics["traffic_ratio"],
