@@ -69,7 +69,7 @@ def rows():
     sweep = envelope_sweep()
     worst_a = max(sweep["a"], key=lambda r: r["exposed_pct"])
     out.append(("exposure/envelope_worst_a", worst_a["t_exposed_s"] * 1e6,
-                f"link={worst_a['link_gbps']}GBps depth={worst_a['depth_mult']}x "
+                f"link={worst_a['link_GBps']}GBps depth={worst_a['depth_mult']}x "
                 f"exposed={worst_a['exposed_pct']:.2f}pct"))
     hidden_frac = np.mean([r["hidden"] for r in sweep["a"]])
     out.append(("exposure/envelope_hidden_fraction", 0.0,
@@ -77,4 +77,30 @@ def rows():
     d10 = [r for r in sweep["d"] if r["stale_steps"] == 10][0]
     out.append(("exposure/telemetry_staleness_10steps", 0.0,
                 f"amortized_cost={d10['amortized_step_cost_pct']:.3f}pct"))
+    out.extend(sim_rows())
     return out
+
+
+def sim_rows():
+    """Cycle-level simulator cross-check of the analytic exposure model.
+
+    (The paper's operating-point scenarios live in ``bench_sim`` — not
+    duplicated here, so every ``sim/*`` metric name is emitted once per
+    full run.)
+    """
+    from repro.core.traffic import IciModel
+    from repro.sim import LaunchSpec, simulate_launches
+
+    # degenerate single-launch agreement: sim vs closed-form exposure
+    n, w, wb = 8 << 20, 32, 1024.0        # cheap collective -> exposed
+    model = ExposureModel()
+    ref = model.exposed(n, w, wb)
+    spec = LaunchSpec("agree", AggregationMode.G_BINARY, "vote_psum", n, wb)
+    rep = simulate_launches(
+        [spec], w, topology="ici_ring", datapath=model.datapath,
+        ici=IciModel(link_bytes_per_s=model.link_bw, hop_latency_s=0.0,
+                     launch_overhead_s=0.0))
+    delta = abs(rep.launches[0].exposed_s - ref["t_exposed_s"])
+    rel = delta / ref["t_exposed_s"] if ref["t_exposed_s"] else 0.0
+    return [("sim/analytic_agreement", rep.launches[0].exposed_s * 1e6,
+             f"rel_delta={rel:.2e} (tolerance 1e-2)")]

@@ -1,0 +1,59 @@
+"""Fabric-simulator benchmark: scenario sweep + machine-readable output.
+
+Replays the paper's operating points and a GPT-2 XL fused bucket layout
+across every built-in topology through the :mod:`repro.sim`
+discrete-event simulator, and writes ``BENCH_sim.json`` (exposed %,
+launch count, link utilization, step time per scenario) so the perf
+trajectory of the simulated timeline is tracked run-over-run by CI.
+"""
+import json
+import os
+
+from repro.core.buckets import (AdmissionPlan, DEFAULT_BUCKET_BYTES,
+                                plan_buckets, resolve_policies)
+from repro.core.modes import AggregationMode, Schedule
+from repro.sim import (available_topologies, paper_operating_points,
+                       simulate_layout)
+
+from benchmarks.bench_comm_model import W, _gpt2_xl_leaves
+
+#: where the machine-readable scenario summary lands (cwd of the run)
+BENCH_SIM_JSON = os.environ.get("BENCH_SIM_JSON", "BENCH_sim.json")
+
+#: modeled backward-pass time for the GPT-2 XL scenario (6*N*B*S at
+#: derated v5e peak, order-of-magnitude — the sim cares about overlap
+#: structure, not the absolute value)
+GPT2_XL_COMPUTE_S = 25e-3
+
+
+def _gpt2_xl_layout():
+    params = _gpt2_xl_leaves()
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
+                                         schedule=Schedule.PACKED_A2A)
+    policies = resolve_policies(params, plan)
+    return plan_buckets(params, policies, bucket_bytes=DEFAULT_BUCKET_BYTES)
+
+
+def scenario_reports():
+    """name -> SimReport for every benchmark scenario."""
+    reports = dict(paper_operating_points())
+    layout = _gpt2_xl_layout()
+    for topo in available_topologies():
+        reports[f"gpt2xl_fused/{topo}"] = simulate_layout(
+            layout, W, topology=topo, compute_time_s=GPT2_XL_COMPUTE_S)
+    return reports
+
+
+def rows():
+    out = []
+    bench = {}
+    for name, rep in sorted(scenario_reports().items()):
+        bench[name] = rep.summary()
+        out.append((f"sim/{name}", rep.step_time_s * 1e6,
+                    f"exposed_pct={rep.exposed_pct:.3f} "
+                    f"launches={rep.num_launches} hidden={rep.hidden}"))
+    with open(BENCH_SIM_JSON, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    out.append(("sim/bench_json", 0.0,
+                f"wrote {BENCH_SIM_JSON} ({len(bench)} scenarios)"))
+    return out

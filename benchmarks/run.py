@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_comm_model   — Fig 7 (modeled gradient-communication component)
   bench_hardware     — Table 7 / Fig 8 (datapath cost analogue)
   bench_roofline     — §Roofline source (reads results/dryrun)
+  bench_sim          — repro.sim scenario sweep (writes BENCH_sim.json)
 
 Usage: python -m benchmarks.run [--only datapath,comm_model]
 """
@@ -16,8 +17,8 @@ import argparse
 import sys
 import time
 
-MODULES = ("datapath", "functional", "hardware", "comm_model", "roofline",
-           "recovery", "convergence")
+MODULES = ("datapath", "functional", "hardware", "comm_model", "sim",
+           "roofline", "recovery", "convergence")
 
 
 def main() -> None:

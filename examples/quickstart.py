@@ -37,6 +37,20 @@ def main():
     plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
                                          schedule=Schedule.PACKED_A2A)
 
+    # Simulate your plan before training it: the same bucket layout the
+    # train step will launch, replayed by the repro.sim discrete-event
+    # simulator on two interconnects — is the aggregation datapath
+    # hidden behind the collective, or exposed in the step time?
+    from repro.models import init_params
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    for topo in ("ici_ring", "cxl_switched"):
+        rep = fabric.simulate(params, plan, topology=topo,
+                              compute_time_s=1e-3)
+        print(f"[sim:{topo}] launches={rep.num_launches} "
+              f"step={rep.step_time_s * 1e3:.2f}ms "
+              f"exposed={rep.exposed_pct:.2f}% of step "
+              f"({'datapath hidden' if rep.hidden else 'datapath exposed'})")
+
     trainer = Trainer(cfg, mesh, AdamW(peak_lr=2e-3, total_steps=200),
                       data, plan=plan, fabric=fabric,
                       tcfg=TrainerConfig(dp_axes=("data",), log_interval=20))

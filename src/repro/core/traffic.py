@@ -15,6 +15,7 @@ Two distinct views, kept separate exactly as in the paper:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Mapping
 
 from .buckets import AdmissionPlan, BucketLayout
@@ -79,14 +80,51 @@ def wire_bytes_per_device(n_elements: int, mode: AggregationMode,
 # modeled communication time (paper Fig 7, TPU-adapted)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class IciModel:
-    """TPU v5e-like interconnect constants (see EXPERIMENTS.md §Roofline)."""
-    link_gbps: float = 50e9          # bytes/s per ICI link direction
-    links_per_chip: float = 1.0      # effective links usable by the collective
-    hop_latency_s: float = 1e-6      # per-step latency of a ring stage
-    launch_overhead_s: float = 20e-6  # fixed dispatch cost per collective
-                                      # launch (host dispatch + XLA ramp-up)
+    """TPU v5e-like interconnect constants (see EXPERIMENTS.md §Roofline).
+
+    ``link_bytes_per_s`` is bytes/s per ICI link direction.  The old
+    field name ``link_gbps`` was misleading (the value was always
+    bytes/s, never Gbit/s); it survives as a deprecated constructor
+    kwarg and read-only property carrying the same bytes/s value.
+    """
+    link_bytes_per_s: float          # bytes/s per ICI link direction
+    links_per_chip: float            # effective links usable by the collective
+    hop_latency_s: float             # per-step latency of a ring stage
+    launch_overhead_s: float         # fixed dispatch cost per collective
+                                     # launch (host dispatch + XLA ramp-up)
+
+    def __init__(self, link_bytes_per_s: float | None = None,
+                 links_per_chip: float = 1.0,
+                 hop_latency_s: float = 1e-6,
+                 launch_overhead_s: float = 20e-6, *,
+                 link_gbps: float | None = None) -> None:
+        if link_gbps is not None:
+            warnings.warn(
+                "IciModel(link_gbps=...) is deprecated: the field always "
+                "held bytes/s, not Gbit/s — pass link_bytes_per_s instead",
+                DeprecationWarning, stacklevel=2)
+            if link_bytes_per_s is not None:
+                raise TypeError("pass link_bytes_per_s or the deprecated "
+                                "link_gbps, not both")
+            link_bytes_per_s = link_gbps
+        if link_bytes_per_s is None:
+            link_bytes_per_s = 50e9
+        object.__setattr__(self, "link_bytes_per_s", float(link_bytes_per_s))
+        object.__setattr__(self, "links_per_chip", float(links_per_chip))
+        object.__setattr__(self, "hop_latency_s", float(hop_latency_s))
+        object.__setattr__(self, "launch_overhead_s",
+                           float(launch_overhead_s))
+
+    @property
+    def link_gbps(self) -> float:
+        """Deprecated alias for :attr:`link_bytes_per_s` (bytes/s)."""
+        warnings.warn(
+            "IciModel.link_gbps is deprecated (it holds bytes/s, not "
+            "Gbit/s); read link_bytes_per_s instead",
+            DeprecationWarning, stacklevel=2)
+        return self.link_bytes_per_s
 
     def collective_time(self, per_device_bytes: float, num_workers: int,
                         num_launches: int = 1) -> float:
@@ -98,7 +136,7 @@ class IciModel:
         fusion amortizes (one launch per 32 MiB bucket instead of one
         per gradient leaf).
         """
-        bw = self.link_gbps * self.links_per_chip
+        bw = self.link_bytes_per_s * self.links_per_chip
         steps = max(2 * (num_workers - 1), 1)
         per_launch = steps * self.hop_latency_s + self.launch_overhead_s
         return per_device_bytes / bw + num_launches * per_launch

@@ -431,6 +431,38 @@ class Fabric:
                                            ef_states=ef, layout=layout)
         return aggregate_tree(self.context, grads, policies, ef_states=ef)
 
+    # -- simulation -----------------------------------------------------
+
+    def simulate(self, params_like: Any, plan: AdmissionPlan | Any, *,
+                 pspecs: Any | None = None, topology: Any = "ici_ring",
+                 datapath: Any | None = None,
+                 overlap_fraction: float = 1.0,
+                 compute_time_s: float = 0.0,
+                 ready_times: Sequence[float] | None = None,
+                 **topology_kwargs):
+        """Simulate one aggregation pass of this session's layout.
+
+        Replays the (cached) bucket layout for ``(params_like, plan)``
+        through the :mod:`repro.sim` discrete-event simulator on any
+        registered topology (``"cxl_direct"``, ``"cxl_switched"``,
+        ``"ici_ring"``, ``"multihop"``, or a custom
+        ``@register_topology`` entry).  ``compute_time_s`` is the
+        backward-pass wall time the collective timeline overlaps with;
+        ``datapath`` defaults to the paper's 5-stage 512-bit
+        :class:`~repro.sim.FlitPipeline`.  Returns a
+        :class:`~repro.sim.SimReport` — per-bucket start/end times,
+        exposed-vs-hidden datapath time, link utilization, and the
+        critical path; ``report.telemetry(step, loss)`` adapts the
+        simulated step time into the controller Telemetry channel.
+        """
+        from ..sim import simulate_layout
+        layout = self.layout_for(params_like, plan, pspecs=pspecs)
+        return simulate_layout(layout, self.num_workers, topology=topology,
+                               datapath=datapath,
+                               overlap_fraction=overlap_fraction,
+                               compute_time_s=compute_time_s,
+                               ready_times=ready_times, **topology_kwargs)
+
     # -- step builder ---------------------------------------------------
 
     def build_step(self, cfg, optimizer, plan: AdmissionPlan,

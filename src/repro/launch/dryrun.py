@@ -40,6 +40,14 @@ def cell_skipped(cfg, cell) -> str | None:
     return None
 
 
+#: crude per-device compute estimate for the simulated timeline: v5e-ish
+#: bf16 peak, derated to a realistic MFU.
+V5E_PEAK_FLOPS = 197e12
+SIM_MFU = 0.4
+#: topologies the dry-run's simulated-timeline section replays per cell
+SIM_TOPOLOGIES = ("ici_ring", "cxl_switched")
+
+
 def run_train_cell(cfg, cell, mesh, plan_name: str,
                    grad_accum: int = 1) -> dict:
     from ..fabric import Fabric
@@ -53,8 +61,17 @@ def run_train_cell(cfg, cell, mesh, plan_name: str,
     t0 = time.time()
     lowered = step.step_fn.lower(state, batch)
     compiled = lowered.compile()
-    return analyze(compiled, mesh, t0, cfg, cell, extra={
+    result = analyze(compiled, mesh, t0, cfg, cell, extra={
         "plan": plan_name, "num_workers": step.aux["num_workers"]})
+    # simulated collective timeline (repro.sim): the cell's bucket layout
+    # replayed per topology against an MFU-derated compute estimate
+    compute_s = (model_flops_per_device(cfg, cell, mesh.devices.size)
+                 / (V5E_PEAK_FLOPS * SIM_MFU))
+    result["sim"] = {
+        topo: fabric.simulate(state.params, plan, topology=topo,
+                              compute_time_s=compute_s).summary()
+        for topo in SIM_TOPOLOGIES}
+    return result
 
 
 def run_decode_cell(cfg, cell, mesh) -> dict:

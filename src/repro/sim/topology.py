@@ -1,0 +1,202 @@
+"""Pluggable interconnect topologies for the fabric simulator.
+
+A topology maps one collective *launch* (wire bytes per device, worker
+count) to a :class:`Route`: an ordered tuple of :class:`Hop` link
+occupancies plus a fixed (non-serialized) latency.  The trace driver
+walks the hops through shared :class:`~repro.sim.engine.Resource`
+objects, so two launches routed over the same link name queue — the
+behaviour the closed-form :class:`repro.core.traffic.IciModel` cannot
+express.
+
+Topologies register under a string name with :func:`register_topology`
+(the same extension idiom as ``repro.fabric.register_schedule`` and
+``register_controller``).  Built-ins:
+
+  * ``"cxl_direct"``   — each step's launches share one direct-attach
+    CXL link to the fabric memory device (the paper's baseline).
+  * ``"cxl_switched"`` — host uplink -> switch crossbar -> device, a
+    CXL shared-memory pool as in CXL-CCL (arXiv 2602.22457).
+  * ``"ici_ring"``     — TPU ICI ring collectives; constants come from
+    :class:`repro.core.traffic.IciModel`, so on a single queue-free
+    launch the simulated collective time equals
+    ``IciModel.collective_time`` exactly.
+  * ``"multihop"``     — h-hop hierarchical all-reduce with per-hop
+    payload compression, as in DynamiQ (arXiv 2602.08923).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from ..core.traffic import IciModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Hop:
+    """One serialized occupancy of a named link."""
+    link: str
+    hold_s: float          # serialization time (bytes / link bandwidth)
+    bytes: float = 0.0     # payload crossing this link (reporting only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """A launch's path through the fabric: hops + fixed latency."""
+    hops: tuple            # tuple[Hop], traversed in order
+    latency_s: float = 0.0  # propagation / dispatch time, never queued
+
+    @property
+    def service_s(self) -> float:
+        """Total link-serialization time (the bandwidth term)."""
+        return sum(h.hold_s for h in self.hops)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_TOPOLOGIES: dict[str, Callable] = {}
+
+
+def register_topology(name: str):
+    """Class/factory decorator: register a topology under ``name``.
+
+    The registered object is called with the ``get_topology`` kwargs and
+    must return an instance exposing
+    ``route(wire_bytes, num_workers, index) -> Route``.
+    """
+    def deco(factory):
+        if name in _TOPOLOGIES:
+            raise ValueError(f"topology {name!r} is already registered")
+        _TOPOLOGIES[name] = factory
+        return factory
+    return deco
+
+
+def unregister_topology(name: str) -> None:
+    _TOPOLOGIES.pop(name, None)
+
+
+def available_topologies() -> tuple[str, ...]:
+    return tuple(sorted(_TOPOLOGIES))
+
+
+def get_topology(name_or_topology, **kwargs):
+    """Resolve a topology by registered name (or pass one through)."""
+    if not isinstance(name_or_topology, str):
+        if kwargs:
+            raise TypeError("factory kwargs are only valid with a "
+                            "registered topology name")
+        return name_or_topology
+    try:
+        factory = _TOPOLOGIES[name_or_topology]
+    except KeyError:
+        raise KeyError(
+            f"unknown topology {name_or_topology!r}; available: "
+            f"{', '.join(available_topologies())}") from None
+    return factory(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# built-ins
+# ---------------------------------------------------------------------------
+
+@register_topology("cxl_direct")
+@dataclasses.dataclass(frozen=True)
+class CxlDirect:
+    """Direct-attach CXL: every launch crosses one shared device link.
+
+    The fixed latency is two memory round-trips (gradient write +
+    aggregate read-back — the paper's fixed CXL access latency) plus the
+    launch dispatch overhead.
+    """
+    name: str = "cxl_direct"
+    link_bytes_per_s: float = 64e9       # CXL 3.x x8-ish payload rate
+    mem_access_latency_s: float = 400e-9
+    launch_overhead_s: float = 2e-6
+
+    def route(self, wire_bytes: float, num_workers: int,
+              index: int = 0) -> Route:
+        return Route(
+            hops=(Hop("cxl", wire_bytes / self.link_bytes_per_s,
+                      bytes=wire_bytes),),
+            latency_s=2 * self.mem_access_latency_s + self.launch_overhead_s)
+
+
+@register_topology("cxl_switched")
+@dataclasses.dataclass(frozen=True)
+class CxlSwitched:
+    """CXL shared-memory pool behind a switch (CXL-CCL-style).
+
+    Launches serialize twice — host uplink, then the switch crossbar to
+    the pooled device — and pay the switch traversal both ways.
+    """
+    name: str = "cxl_switched"
+    uplink_bytes_per_s: float = 64e9
+    crossbar_bytes_per_s: float = 128e9  # switch fabric is wider
+    switch_latency_s: float = 250e-9
+    mem_access_latency_s: float = 400e-9
+    launch_overhead_s: float = 2e-6
+
+    def route(self, wire_bytes: float, num_workers: int,
+              index: int = 0) -> Route:
+        return Route(
+            hops=(Hop("cxl_up", wire_bytes / self.uplink_bytes_per_s,
+                      bytes=wire_bytes),
+                  Hop("xbar", wire_bytes / self.crossbar_bytes_per_s,
+                      bytes=wire_bytes)),
+            latency_s=(2 * (self.switch_latency_s
+                            + self.mem_access_latency_s)
+                       + self.launch_overhead_s))
+
+
+@register_topology("ici_ring")
+@dataclasses.dataclass(frozen=True)
+class IciRing:
+    """TPU ICI ring collectives, constants from :class:`IciModel`.
+
+    One launch holds the shared ``ici`` link for the bandwidth term and
+    pays ``2(W-1)`` ring-stage hops plus dispatch as fixed latency —
+    term-for-term :meth:`IciModel.collective_time`, so the queue-free
+    single-launch simulation matches the analytic model exactly.
+    """
+    name: str = "ici_ring"
+    ici: IciModel = dataclasses.field(default_factory=IciModel)
+
+    def route(self, wire_bytes: float, num_workers: int,
+              index: int = 0) -> Route:
+        bw = self.ici.link_bytes_per_s * self.ici.links_per_chip
+        steps = max(2 * (num_workers - 1), 1)
+        return Route(
+            hops=(Hop("ici", wire_bytes / bw, bytes=wire_bytes),),
+            latency_s=(steps * self.ici.hop_latency_s
+                       + self.ici.launch_overhead_s))
+
+
+@register_topology("multihop")
+@dataclasses.dataclass(frozen=True)
+class MultiHop:
+    """Hierarchical h-hop all-reduce with progressive compression.
+
+    DynamiQ-style: each hop re-quantizes, shrinking the payload by
+    ``compression`` before the next stage.  Hops serialize on distinct
+    per-stage links (``hop0 .. hop{h-1}``), so concurrent launches
+    pipeline across stages while same-stage transfers queue.
+    """
+    name: str = "multihop"
+    hops: int = 4
+    link_bytes_per_s: float = 25e9
+    hop_latency_s: float = 2e-6
+    launch_overhead_s: float = 5e-6
+    compression: float = 0.5
+
+    def route(self, wire_bytes: float, num_workers: int,
+              index: int = 0) -> Route:
+        hops = []
+        b = float(wire_bytes)
+        for k in range(max(1, self.hops)):
+            hops.append(Hop(f"hop{k}", b / self.link_bytes_per_s, bytes=b))
+            b *= self.compression
+        return Route(hops=tuple(hops),
+                     latency_s=(len(hops) * self.hop_latency_s
+                                + self.launch_overhead_s))

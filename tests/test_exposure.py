@@ -1,0 +1,156 @@
+"""Direct unit tests for the analytic models the simulator validates
+against: ExposureModel.exposed, the envelope_sweep panel invariants, the
+layout communication-time model, and the IciModel field rename shim."""
+import warnings
+
+import jax
+import pytest
+
+from repro.core.buckets import (AdmissionPlan, plan_buckets,
+                                resolve_policies)
+from repro.core.exposure import (ExposureModel, TpuDatapathModel,
+                                 envelope_sweep)
+from repro.core.modes import AggregationMode, Schedule
+from repro.core.traffic import (IciModel, modeled_comm_time,
+                                modeled_layout_comm_time,
+                                wire_bytes_per_device)
+
+
+# ---------------------------------------------------------------------------
+# ExposureModel.exposed
+# ---------------------------------------------------------------------------
+
+def test_exposed_is_agg_minus_overlapped_service():
+    m = ExposureModel(overlap_fraction=0.5)
+    n, w, wb = 1 << 20, 16, 4096.0
+    r = m.exposed(n, w, wb)
+    t_agg = m.datapath.t_agg(n, w)
+    t_srv = wb / m.link_bw
+    assert r["t_agg_s"] == pytest.approx(t_agg)
+    assert r["t_service_s"] == pytest.approx(t_srv)
+    assert r["t_exposed_s"] == pytest.approx(max(0.0, t_agg - 0.5 * t_srv))
+    assert not r["hidden"]
+
+
+def test_exposed_zero_service_has_no_div_by_zero():
+    m = ExposureModel()
+    r = m.exposed(1 << 20, 16, wire_bytes_per_device=0.0)
+    assert r["t_service_s"] == 0.0
+    assert r["t_exposed_s"] == pytest.approx(r["t_agg_s"])
+    assert r["exposed_pct"] == pytest.approx(100.0)   # base falls back to t_agg
+
+
+def test_exposed_extra_service_extends_hiding_window():
+    m = ExposureModel(overlap_fraction=0.5)
+    n, w, wb = 8 << 20, 32, 1024.0
+    base = m.exposed(n, w, wb)
+    more = m.exposed(n, w, wb, extra_service_s=1e-3)
+    assert more["t_service_s"] == pytest.approx(base["t_service_s"] + 1e-3)
+    # the extra latency hides only overlap_fraction of itself
+    assert more["t_exposed_s"] == pytest.approx(
+        max(0.0, base["t_exposed_s"] - 0.5 * 1e-3))
+
+
+# ---------------------------------------------------------------------------
+# envelope_sweep panel invariants
+# ---------------------------------------------------------------------------
+
+def test_panel_b_routes_through_the_model():
+    """Panel (b) rows must be exactly ExposureModel.exposed with the hop
+    latency folded into the service path — the old hand-patched dict
+    ignored overlap_fraction and divided by an unguarded t_service_s."""
+    n, w = 8 << 20, 32
+    wb = 3 * n / 8
+    rows = envelope_sweep(n_elements=n, num_workers=w,
+                          wire_bytes_per_device=wb)
+    m = ExposureModel()
+    for row in rows["b"]:
+        extra = 2 * (w - 1) * row["hop_us"] * 1e-6
+        ref = m.exposed(n, w, wb, extra_service_s=extra)
+        for k in ("t_agg_s", "t_service_s", "t_exposed_s", "exposed_pct",
+                  "hidden"):
+            assert row[k] == pytest.approx(ref[k]), (row["hop_us"], k)
+
+
+def test_panel_b_monotone_in_hop_latency():
+    rows = envelope_sweep()["b"]
+    exposed = [r["t_exposed_s"] for r in rows]
+    service = [r["t_service_s"] for r in rows]
+    assert service == sorted(service)
+    assert exposed == sorted(exposed, reverse=True)
+    assert all(r["exposed_pct"] >= 0.0 for r in rows)
+
+
+def test_panel_a_reports_link_GBps():
+    rows = envelope_sweep()["a"]
+    assert all("link_GBps" in r and "link_gbps" not in r for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# layout communication-time model
+# ---------------------------------------------------------------------------
+
+def _tree(leaves=5, n=1 << 16):
+    return {f"w{i}": jax.ShapeDtypeStruct((n,), "float32")
+            for i in range(leaves)}
+
+
+def test_layout_comm_time_per_leaf_degenerate_equals_leaf_sum():
+    """bucket_bytes=1 gives one launch per leaf, so the layout model must
+    equal summing modeled_comm_time over the leaves."""
+    w = 8
+    params = _tree()
+    plan = AdmissionPlan.lowbit_all(AggregationMode.G_BINARY,
+                                    schedule=Schedule.PACKED_A2A)
+    policies = resolve_policies(params, plan)
+    per_leaf = plan_buckets(params, policies, bucket_bytes=1)
+    assert per_leaf.num_launches == len(params)
+    ici = IciModel()
+    ref = sum(modeled_comm_time(1 << 16, AggregationMode.G_BINARY,
+                                Schedule.PACKED_A2A, w, ici)
+              for _ in range(len(params)))
+    assert modeled_layout_comm_time(per_leaf, w, ici) == pytest.approx(ref)
+
+
+def test_layout_comm_time_fusion_strictly_wins():
+    w = 8
+    params = _tree(leaves=16)
+    plan = AdmissionPlan.lowbit_all(AggregationMode.G_BINARY,
+                                    schedule=Schedule.PACKED_A2A)
+    policies = resolve_policies(params, plan)
+    per_leaf = plan_buckets(params, policies, bucket_bytes=1)
+    fused = plan_buckets(params, policies)
+    assert fused.num_launches < per_leaf.num_launches
+    assert modeled_layout_comm_time(fused, w) < \
+        modeled_layout_comm_time(per_leaf, w)
+
+
+# ---------------------------------------------------------------------------
+# IciModel.link_gbps rename shim
+# ---------------------------------------------------------------------------
+
+def test_ici_link_bytes_per_s_is_canonical():
+    m = IciModel(link_bytes_per_s=25e9)
+    assert m.link_bytes_per_s == 25e9
+    assert m.collective_time(25e9, 2, num_launches=0) == pytest.approx(1.0)
+
+
+def test_ici_link_gbps_deprecated_but_compatible():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        m = IciModel(link_gbps=25e9)
+        read = m.link_gbps
+    assert m.link_bytes_per_s == 25e9 and read == 25e9
+    assert sum(issubclass(w.category, DeprecationWarning)
+               for w in caught) == 2
+    # old-name and new-name constructions are the same model
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert IciModel(link_gbps=25e9) == IciModel(link_bytes_per_s=25e9)
+
+
+def test_ici_both_bandwidth_kwargs_rejected():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(TypeError, match="not both"):
+            IciModel(link_bytes_per_s=1e9, link_gbps=2e9)

@@ -1,0 +1,316 @@
+"""repro.sim: engine semantics, topology registry, and — the load-bearing
+part — agreement with the analytic exposure/traffic models on degenerate
+configs plus the paper's operating-point regimes."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.core.buckets import (AdmissionPlan, DEFAULT_BUCKET_BYTES,
+                                plan_buckets, resolve_policies)
+from repro.core.exposure import ExposureModel, TpuDatapathModel
+from repro.core.modes import AggregationMode, Schedule
+from repro.core.traffic import IciModel, modeled_layout_comm_time
+from repro.fabric import Fabric
+from repro.sim import (FlitPipeline, LaunchSpec, PAPER_EXPOSED_BOUND_PCT,
+                       available_topologies, get_topology,
+                       paper_operating_points, register_topology,
+                       simulate_launches, simulate_layout,
+                       unregister_topology)
+from repro.sim.engine import Engine, Resource
+
+REL_TOL = 0.01      # the acceptance bar: sim-vs-analytic within 1%
+
+
+def _quiet_ici(link_bw: float) -> IciModel:
+    """ICI constants with zero latency terms — pure bandwidth path."""
+    return IciModel(link_bytes_per_s=link_bw, hop_latency_s=0.0,
+                    launch_overhead_s=0.0)
+
+
+def _params(leaves: int = 6, n: int = 1 << 18):
+    return {"backbone": {f"w{i}": jax.ShapeDtypeStruct((n,), "float32")
+                         for i in range(leaves)},
+            "head": {"w": jax.ShapeDtypeStruct((n, 4), "float32")}}
+
+
+# ---------------------------------------------------------------------------
+# engine primitives
+# ---------------------------------------------------------------------------
+
+def test_engine_orders_events_and_resources_fifo():
+    eng = Engine()
+    order = []
+    eng.at(2.0, lambda: order.append("late"))
+    eng.at(1.0, lambda: order.append("early"))
+    eng.at(1.0, lambda: order.append("early2"))   # tie -> scheduling order
+    res = Resource("link", eng)
+    grants = []
+    res.request(0.0, 3.0, lambda s, e: grants.append((s, e)))
+    res.request(1.0, 2.0, lambda s, e: grants.append((s, e)))
+    eng.run()
+    assert order == ["early", "early2", "late"]
+    assert grants == [(0.0, 3.0), (3.0, 5.0)]     # second queued behind first
+    assert res.stats.busy_s == 5.0
+    assert res.stats.queue_delay_s == 2.0         # 3.0 start vs 1.0 ready
+
+
+# ---------------------------------------------------------------------------
+# topology registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_topologies_registered():
+    names = available_topologies()
+    assert len(names) >= 4
+    assert {"cxl_direct", "cxl_switched", "ici_ring",
+            "multihop"} <= set(names)
+
+
+def test_register_unregister_roundtrip():
+    @register_topology("test_bus")
+    @dataclasses.dataclass(frozen=True)
+    class Bus:
+        name: str = "test_bus"
+        bw: float = 1e9
+
+        def route(self, wire_bytes, num_workers, index=0):
+            from repro.sim import Hop, Route
+            return Route(hops=(Hop("bus", wire_bytes / self.bw),),
+                         latency_s=0.0)
+
+    try:
+        assert "test_bus" in available_topologies()
+        topo = get_topology("test_bus", bw=2e9)
+        assert topo.bw == 2e9
+        spec = LaunchSpec("x", AggregationMode.FP32, "psum", 1024, 2e9)
+        rep = simulate_launches([spec], 4, topology="test_bus", bw=2e9)
+        assert rep.topology == "test_bus"
+        assert rep.launches[0].service_s == pytest.approx(1.0)
+        with pytest.raises(ValueError):
+            register_topology("test_bus")(Bus)     # duplicate name
+    finally:
+        unregister_topology("test_bus")
+    with pytest.raises(KeyError):
+        get_topology("test_bus")
+
+
+def test_multihop_compresses_payload_per_hop():
+    topo = get_topology("multihop", hops=3, compression=0.5)
+    route = topo.route(1024.0, 8)
+    assert [h.bytes for h in route.hops] == [1024.0, 512.0, 256.0]
+    assert len({h.link for h in route.hops}) == 3   # distinct stage links
+
+
+# ---------------------------------------------------------------------------
+# sim vs analytic: degenerate single-launch agreement (acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overlap", [1.0, 0.5, 0.0])
+@pytest.mark.parametrize("wire_bytes", [1024.0, 3 * (8 << 20) / 8])
+def test_degenerate_exposed_matches_exposure_model(overlap, wire_bytes):
+    """One launch, no queueing: sim exposed == ExposureModel within 1%."""
+    n, w = 8 << 20, 32
+    model = ExposureModel(overlap_fraction=overlap)
+    ref = model.exposed(n, w, wire_bytes)
+    spec = LaunchSpec("b", AggregationMode.G_BINARY, "vote_psum",
+                      n, wire_bytes)
+    rep = simulate_launches([spec], w, topology="ici_ring",
+                            datapath=model.datapath,
+                            overlap_fraction=overlap,
+                            ici=_quiet_ici(model.link_bw))
+    sim_exposed = rep.launches[0].exposed_s
+    if ref["t_exposed_s"] == 0.0:
+        assert sim_exposed == 0.0 and rep.hidden
+    else:
+        assert sim_exposed == pytest.approx(ref["t_exposed_s"], rel=REL_TOL)
+    assert rep.launches[0].t_agg_s == pytest.approx(ref["t_agg_s"],
+                                                    rel=REL_TOL)
+
+
+@pytest.mark.parametrize("overlap", [1.0, 0.5])
+def test_degenerate_exposed_matches_analytic_with_hop_latency(overlap):
+    """Nonzero route latency: the sim's hiding window must fold the
+    fixed latency in exactly like ExposureModel's extra_service_s, so
+    the two models agree off the zero-latency subspace too."""
+    n, w, wire_bytes = 8 << 20, 32, 1024.0
+    model = ExposureModel(overlap_fraction=overlap)
+    ici = IciModel(link_bytes_per_s=model.link_bw)     # default latencies
+    latency = 2 * (w - 1) * ici.hop_latency_s + ici.launch_overhead_s
+    ref = model.exposed(n, w, wire_bytes, extra_service_s=latency)
+    spec = LaunchSpec("b", AggregationMode.G_BINARY, "vote_psum",
+                      n, wire_bytes)
+    rep = simulate_launches([spec], w, topology="ici_ring",
+                            datapath=model.datapath,
+                            overlap_fraction=overlap, ici=ici)
+    if ref["t_exposed_s"] == 0.0:
+        assert rep.launches[0].exposed_s == 0.0
+    else:
+        assert rep.launches[0].exposed_s == pytest.approx(
+            ref["t_exposed_s"], rel=REL_TOL)
+
+
+def test_zero_hop_route_still_models_the_datapath():
+    """A pure-latency route (no serialized hops) must not silently skip
+    datapath occupancy — exposure accounting still runs."""
+    @register_topology("test_loopback")
+    @dataclasses.dataclass(frozen=True)
+    class Loopback:
+        name: str = "test_loopback"
+
+        def route(self, wire_bytes, num_workers, index=0):
+            from repro.sim import Route
+            return Route(hops=(), latency_s=5e-6)
+
+    try:
+        n, w = 1 << 20, 8
+        dp = FlitPipeline()
+        rep = simulate_launches(
+            [LaunchSpec("x", AggregationMode.G_BINARY, "vote_psum",
+                        n, 0.0, ready_s=1e-3)],
+            w, topology="test_loopback", datapath=dp)
+        l = rep.launches[0]
+        assert l.start_s == pytest.approx(1e-3)
+        assert l.t_agg_s == pytest.approx(
+            dp.t_agg(n, w, AggregationMode.G_BINARY))
+        assert l.dp_end_s > l.dp_start_s >= l.start_s
+        # nothing to hide behind but the 5us latency
+        assert l.exposed_s == pytest.approx(max(0.0, l.t_agg_s - 5e-6))
+        assert "datapath" in rep.link_utilization
+    finally:
+        unregister_topology("test_loopback")
+
+
+def test_ready_times_length_mismatch_raises():
+    fabric = Fabric(num_workers=8)
+    params = _params(leaves=2)
+    plan = AdmissionPlan.fp32_all()
+    launches = fabric.layout_for(params, plan).num_launches
+    with pytest.raises(ValueError, match="ready times"):
+        fabric.simulate(params, plan, ready_times=[0.0] * (launches + 1))
+
+
+@pytest.mark.parametrize("num_workers", [2, 8, 32])
+def test_degenerate_collective_matches_ici_model(num_workers):
+    """One launch, no queueing: ready->delivered == collective_time."""
+    n = 4 << 20
+    ici = IciModel()
+    wire_bytes = 3 * n / 8
+    ref = ici.collective_time(wire_bytes, num_workers, num_launches=1)
+    spec = LaunchSpec("b", AggregationMode.G_BINARY, "packed_a2a",
+                      n, wire_bytes)
+    rep = simulate_launches([spec], num_workers, topology="ici_ring",
+                            datapath=None, ici=ici)
+    assert rep.launches[0].collective_s == pytest.approx(ref, rel=REL_TOL)
+
+
+def test_layout_sim_bracketed_by_analytic_launch_model():
+    """Multi-launch: queueing serializes bandwidth terms but overlaps
+    latency terms, so the simulated timeline lands between the pure
+    bandwidth sum and the fully-serial analytic per-launch sum."""
+    w = 8
+    params = _params()
+    plan = AdmissionPlan.lowbit_all(AggregationMode.G_BINARY,
+                                    schedule=Schedule.PACKED_A2A)
+    policies = resolve_policies(params, plan)
+    layout = plan_buckets(params, policies, bucket_bytes=1 << 20)
+    assert layout.num_launches > 1
+    ici = IciModel()
+    analytic_serial = modeled_layout_comm_time(layout, w, ici)
+    rep = simulate_layout(layout, w, topology="ici_ring", datapath=None,
+                          compute_time_s=0.0, ici=ici)
+    bw_sum = sum(l.service_s for l in rep.launches)
+    per_launch_latency = rep.launches[0].latency_s
+    assert bw_sum + per_launch_latency <= rep.step_time_s
+    assert rep.step_time_s <= analytic_serial * (1 + REL_TOL)
+    # the shared ring link actually queued the later buckets
+    assert any(l.queue_delay_s > 0 for l in rep.launches[1:])
+    assert all(0.0 <= u <= 1.0 for u in rep.link_utilization.values())
+
+
+# ---------------------------------------------------------------------------
+# the paper's operating points
+# ---------------------------------------------------------------------------
+
+def test_paper_full_miss_regime_exposed_but_bounded():
+    rep = paper_operating_points()["full_miss"]
+    assert not rep.hidden
+    assert 0.0 < rep.exposed_pct <= PAPER_EXPOSED_BOUND_PCT
+
+
+def test_paper_bandwidth_pressure_fully_hidden():
+    rep = paper_operating_points()["bandwidth_pressure"]
+    assert rep.hidden
+    assert rep.exposed_pct == 0.0
+    assert all(l.exposed_s == 0.0 for l in rep.launches)
+
+
+# ---------------------------------------------------------------------------
+# datapath pipeline model
+# ---------------------------------------------------------------------------
+
+def test_flit_pipeline_lanes_and_stalls():
+    dp = FlitPipeline()
+    n, w = 1 << 20, 8
+    binary = dp.t_agg(n, w, AggregationMode.G_BINARY)
+    ternary = dp.t_agg(n, w, AggregationMode.G_TERNARY)
+    fp32 = dp.t_agg(n, w, AggregationMode.FP32)
+    assert ternary > binary          # gate fetch stalls the pipeline
+    assert fp32 > binary             # 32x the flits on the bypass lane
+    # full-miss stalls strictly slow the same launch down
+    missy = FlitPipeline(miss_stall_cycles=2.0)
+    assert missy.t_agg(n, w, AggregationMode.G_BINARY) > binary
+    # flit math: 1 bit/element -> n/512 flits
+    assert dp.flits(n, AggregationMode.G_BINARY) == n // 512
+    assert dp.flits(n, AggregationMode.FP32) == n * 32 // 512
+
+
+def test_flit_pipeline_worker_fanin_serializes():
+    dp = FlitPipeline(worker_ports=16)
+    n = 1 << 20
+    assert dp.t_agg(n, 64, AggregationMode.G_BINARY) > \
+        dp.t_agg(n, 16, AggregationMode.G_BINARY)
+
+
+# ---------------------------------------------------------------------------
+# Fabric.simulate + report plumbing
+# ---------------------------------------------------------------------------
+
+def test_fabric_simulate_reports_layout_timeline():
+    fabric = Fabric(num_workers=8)
+    params = _params()
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
+                                         schedule=Schedule.PACKED_A2A)
+    layout = fabric.layout_for(params, plan)
+    rep = fabric.simulate(params, plan, topology="cxl_switched",
+                          compute_time_s=2e-3)
+    assert rep.num_launches == layout.num_launches
+    assert rep.step_time_s >= 2e-3
+    assert rep.topology == "cxl_switched"
+    # per-launch records carry the per-bucket start/end timeline
+    for l in rep.launches:
+        assert l.end_s >= l.start_s >= 0.0
+        assert l.hidden_s == pytest.approx(l.t_agg_s - l.exposed_s)
+    # report is JSON-serializable for dryrun / BENCH_sim.json
+    import json
+    blob = json.dumps(rep.to_jsonable())
+    assert "link_utilization" in blob
+    summary = rep.summary()
+    assert "launches" not in summary and summary["num_launches"] == \
+        rep.num_launches
+
+
+def test_sim_report_feeds_telemetry():
+    fabric = Fabric(num_workers=4)
+    plan = AdmissionPlan.fp32_all()
+    rep = fabric.simulate(_params(leaves=2), plan, topology="ici_ring",
+                          compute_time_s=1e-3)
+    t = rep.telemetry(step=7, loss=3.25)
+    assert t.step == 7 and t.loss == 3.25
+    assert t.step_time_s == rep.step_time_s
+
+
+def test_fabric_simulate_unknown_topology_raises():
+    fabric = Fabric(num_workers=4)
+    with pytest.raises(KeyError, match="unknown topology"):
+        fabric.simulate(_params(leaves=1), AdmissionPlan.fp32_all(),
+                        topology="warp_drive")
