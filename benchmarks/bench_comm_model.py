@@ -15,15 +15,21 @@ split into its per-leaf tensors (one collective each) vs fused into
 32 MiB buckets (one collective per bucket) — identical bytes, O(leaves)
 vs O(buckets) launch latencies.
 """
+import json
+import os
+
 import jax
 
 from repro.core.buckets import (AdmissionPlan, DEFAULT_BUCKET_BYTES,
-                                plan_buckets, resolve_policies)
+                                group_sizes, plan_buckets, resolve_policies)
 from repro.core.modes import AggregationMode, Schedule
 from repro.core.traffic import (GPT2_XL_PARAMS, IciModel, modeled_comm_time,
-                                modeled_layout_comm_time,
+                                modeled_layout_comm_time, plan_traffic_ratio,
                                 wire_bytes_per_device)
-from repro.fabric import get_schedule
+from repro.fabric import available_codecs, get_codec, get_schedule
+
+#: where the machine-readable per-codec summary lands (cwd of the run)
+BENCH_CODECS_JSON = os.environ.get("BENCH_CODECS_JSON", "BENCH_codecs.json")
 
 W = 32
 PATHS = [
@@ -69,6 +75,46 @@ def _fused_rows(ici):
     ]
 
 
+def _codec_rows(ici):
+    """One row per *registered codec* on the GPT-2 XL backbone plan.
+
+    Every registered codec — built-in or extension — is accounted the
+    same way: bits/element from the codec, modeled traffic ratio of a
+    low-bit-backbone plan, fused-launch count of the resulting bucket
+    layout, and the modeled layout comm time.  The per-codec summary is
+    also written to ``BENCH_codecs.json`` so the perf trajectory of a
+    newly registered codec is tracked run-over-run.
+    """
+    params = _gpt2_xl_leaves()
+    sizes = group_sizes(params)
+    out, bench = [], {}
+    for name in available_codecs():
+        codec = get_codec(name)
+        plan = AdmissionPlan.lowbit_backbone(name)
+        policies = resolve_policies(params, plan)
+        layout = plan_buckets(params, policies,
+                              bucket_bytes=DEFAULT_BUCKET_BYTES)
+        ratio = plan_traffic_ratio(sizes, plan)
+        t = modeled_layout_comm_time(layout, W, ici)
+        bench[name] = {
+            "bits_per_element": codec.bits_per_element,
+            "reduction": codec.reduction,
+            "default_schedule": codec.default_schedule,
+            "traffic_ratio_backbone_plan": ratio,
+            "fused_launches": layout.num_launches,
+            "modeled_layout_comm_time_s": t,
+        }
+        out.append((f"comm_model/codec/{name}", t * 1e6,
+                    f"bits={codec.bits_per_element:.3g} "
+                    f"traffic_ratio={ratio:.4f} "
+                    f"launches={layout.num_launches}"))
+    with open(BENCH_CODECS_JSON, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    out.append(("comm_model/codec/bench_json", 0.0,
+                f"wrote {BENCH_CODECS_JSON} ({len(bench)} codecs)"))
+    return out
+
+
 def rows():
     out = []
     ici = IciModel()
@@ -87,4 +133,5 @@ def rows():
         out.append((f"comm_model/gpt2xl/{name}", t * 1e6,
                     f"wire={b/2**30:.2f}GiB speedup={base/t:.1f}x"))
     out.extend(_fused_rows(ici))
+    out.extend(_codec_rows(ici))
     return out

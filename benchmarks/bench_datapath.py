@@ -65,6 +65,24 @@ def rows():
         out.append((f"exposure/{tag}", r["t_agg_s"] * 1e6,
                     f"exposed_pct={r['exposed_pct']:.2f} hidden={r['hidden']}"))
 
+    # per-codec exposure + flit-pipeline timing: every registered codec
+    # priced through its own wire model and sim lane descriptor
+    from repro.fabric import available_codecs, get_codec
+    from repro.sim import FlitPipeline
+    pipe = FlitPipeline()
+    for name in available_codecs():
+        codec = get_codec(name)
+        wire = codec.default_schedule if codec.reduction == "mean" \
+            else Schedule.PACKED_A2A
+        r = model.exposed_launch(n, 32, name, wire)
+        t_pipe = pipe.t_agg(n, 32, name)
+        out.append((f"exposure/codec/{name}", r["t_agg_s"] * 1e6,
+                    f"wire={wire if isinstance(wire, str) else wire.value} "
+                    f"exposed_pct={r['exposed_pct']:.2f} "
+                    f"hidden={r['hidden']} "
+                    f"flit_pipeline_us={t_pipe * 1e6:.1f} "
+                    f"lane={pipe.lane(name).name}"))
+
     # Fig 3 envelope sweep
     sweep = envelope_sweep()
     worst_a = max(sweep["a"], key=lambda r: r["exposed_pct"])

@@ -12,7 +12,8 @@ The paper's contribution as a composable JAX module:
   * :mod:`exposure`     — datapath timing-exposure model (Section 5, Fig 3)
 """
 from .modes import (AggregationMode, Schedule, bits_per_element,
-                    schedule_name, traffic_ratio, wire_schedule)
+                    canonical_mode, codec_name, schedule_name,
+                    traffic_ratio, wire_schedule)
 from .lowbit import (LeafPolicy, aggregate_leaf, fp32_allreduce,
                      lowbit_packed_a2a, lowbit_vote_psum, majority_sign_sgd,
                      sign_of_mean)
@@ -32,8 +33,8 @@ from .traffic import (IciModel, modeled_comm_time, modeled_layout_comm_time,
 from .exposure import ExposureModel, TpuDatapathModel, envelope_sweep
 
 __all__ = [
-    "AggregationMode", "Schedule", "bits_per_element", "schedule_name",
-    "traffic_ratio", "wire_schedule",
+    "AggregationMode", "Schedule", "bits_per_element", "canonical_mode",
+    "codec_name", "schedule_name", "traffic_ratio", "wire_schedule",
     "LeafPolicy", "aggregate_leaf", "fp32_allreduce", "lowbit_packed_a2a",
     "lowbit_vote_psum", "majority_sign_sgd", "sign_of_mean",
     "AdmissionPlan", "Bucket", "BucketGate", "BucketKey", "BucketLayout",

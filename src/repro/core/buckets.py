@@ -32,8 +32,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .lowbit import LeafPolicy
-from .modes import (AggregationMode, DEFAULT_SCHEDULE, Schedule,
+from .modes import (AggregationMode, Schedule, canonical_mode, codec_name,
                     schedule_name, wire_schedule)
+
+
+def _codec(mode):
+    """Resolve a codec lazily (keeps ``core`` importable without fabric)."""
+    from ..fabric.codecs import get_codec
+    return get_codec(mode)
 
 
 def path_name(key_path) -> str:
@@ -97,18 +103,21 @@ def group_sizes(params: Any, rules: GroupRules | None = None) -> dict[str, int]:
 
 @dataclasses.dataclass(frozen=True)
 class GroupPolicy:
-    """Mode + schedule + EF flag for one parameter group.
+    """Codec + schedule + EF flag for one parameter group.
 
-    ``schedule`` may be a built-in :class:`Schedule`, the string name of
-    any backend registered via ``repro.fabric.register_schedule``, or
-    None for the mode default.
+    ``mode`` names the gradient codec: a built-in
+    :class:`AggregationMode` member or the string name of any codec
+    registered via ``repro.fabric.register_codec``.  ``schedule`` may be
+    a built-in :class:`Schedule`, the string name of any backend
+    registered via ``repro.fabric.register_schedule``, or None for the
+    codec's default transport.
     """
-    mode: AggregationMode = AggregationMode.FP32
-    schedule: Schedule | str | None = None    # None -> mode default
+    mode: AggregationMode | str = AggregationMode.FP32
+    schedule: Schedule | str | None = None    # None -> codec default
     error_feedback: bool = False
 
     def resolved_schedule(self) -> Schedule | str:
-        return self.schedule or DEFAULT_SCHEDULE[self.mode]
+        return self.schedule or _codec(self.mode).default_schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,10 +144,12 @@ class AdmissionPlan:
         return self.default
 
     def signature(self) -> str:
-        items = [f"{g}:{p.mode.value}:{schedule_name(p.resolved_schedule())}"
+        items = [f"{g}:{codec_name(p.mode)}"
+                 f":{schedule_name(p.resolved_schedule())}"
                  f":{int(p.error_feedback)}" for g, p in self.policies]
         d = self.default
-        items.append(f"*:{d.mode.value}:{schedule_name(d.resolved_schedule())}"
+        items.append(f"*:{codec_name(d.mode)}"
+                     f":{schedule_name(d.resolved_schedule())}"
                      f":{int(d.error_feedback)}")
         return "|".join(items)
 
@@ -148,14 +159,14 @@ class AdmissionPlan:
         return AdmissionPlan(default=GroupPolicy(AggregationMode.FP32))
 
     @staticmethod
-    def lowbit_all(mode: AggregationMode = AggregationMode.G_BINARY,
+    def lowbit_all(mode: AggregationMode | str = AggregationMode.G_BINARY,
                    schedule: Schedule | str | None = None,
                    error_feedback: bool = False) -> "AdmissionPlan":
         """'Full-path' low-bit: the configuration CIFAR-100 rejects."""
         return AdmissionPlan(default=GroupPolicy(mode, schedule, error_feedback))
 
     @staticmethod
-    def lowbit_backbone(mode: AggregationMode = AggregationMode.G_BINARY,
+    def lowbit_backbone(mode: AggregationMode | str = AggregationMode.G_BINARY,
                         schedule: Schedule | str | None = None,
                         error_feedback: bool = False) -> "AdmissionPlan":
         """The paper's recovered operating point: low-bit backbone, FP32 head
@@ -212,14 +223,16 @@ def _trivial_spec(spec) -> bool:
 class BucketKey:
     """Fusion-compatibility key: leaves may share a bucket iff equal.
 
-    ``schedule`` is the *wire* schedule name (post
-    :func:`~repro.core.modes.wire_schedule` normalization), so e.g. an
-    FP32 leaf nominally planned on ``packed_a2a`` fuses with plain
-    ``psum`` leaves — exactly the collective the per-leaf path would
-    have launched.  ``model_spec`` is None for fully local leaves;
+    ``mode`` is the canonical codec name (built-in codecs keep their
+    :class:`AggregationMode` member for stable reprs/hashes; registered
+    codecs are plain strings).  ``schedule`` is the *wire* schedule name
+    (post :func:`~repro.core.modes.wire_schedule` normalization), so
+    e.g. an FP32 leaf nominally planned on ``packed_a2a`` fuses with
+    plain ``psum`` leaves — exactly the collective the per-leaf path
+    would have launched.  ``model_spec`` is None for fully local leaves;
     TP-sharded leaves keep their spec (and are never fused).
     """
-    mode: AggregationMode
+    mode: AggregationMode | str
     schedule: str
     error_feedback: bool
     gate_phase: int
@@ -270,12 +283,8 @@ class Bucket:
     size: int                   # total elements in the flat payload
 
     def gate(self) -> BucketGate | None:
-        """The bucket's ternary gate, or None for binary/FP32 buckets."""
-        if AggregationMode(self.key.mode) != AggregationMode.G_TERNARY:
-            return None
-        phase = self.key.gate_phase
-        return BucketGate(segments=tuple((s.size, phase)
-                                         for s in self.slots))
+        """The bucket's zero gate (from its codec), None when ungated."""
+        return _codec(self.key.mode).bucket_gate(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -315,13 +324,13 @@ class BucketLayout:
 
 def leaf_bucket_key(policy, dtype) -> BucketKey:
     """Compatibility key for one leaf under its resolved policy."""
-    mode = AggregationMode(policy.mode)
-    wire = schedule_name(wire_schedule(policy.mode, policy.schedule))
+    mode = canonical_mode(policy.mode)
+    wire = wire_schedule(policy.mode, policy.schedule)
     spec = getattr(policy, "model_spec", None)
-    # only G-Ternary reads the gate phase; normalizing it for every
-    # other mode keeps otherwise-compatible leaves in the same bucket
+    # only gated codecs read the gate phase; normalizing it for every
+    # other codec keeps otherwise-compatible leaves in the same bucket
     phase = (int(getattr(policy, "gate_phase", 0))
-             if mode == AggregationMode.G_TERNARY else 0)
+             if _codec(mode).gated else 0)
     return BucketKey(
         mode=mode, schedule=wire,
         error_feedback=bool(policy.error_feedback),

@@ -85,6 +85,22 @@ class ExposureModel:
             "hidden": t_exp == 0.0,
         }
 
+    def exposed_launch(self, n_elements: int, num_workers: int, mode,
+                       schedule, extra_service_s: float = 0.0) -> dict:
+        """Exposure of one launch, wire bytes priced via the registries.
+
+        ``mode`` is a codec name and ``schedule`` a registered backend;
+        the wire-byte model resolves through
+        :func:`repro.core.traffic.wire_bytes_per_device` (the schedule's
+        transport factor times the codec's payload bytes), so any
+        registered codec/schedule pair gets an exposure figure without
+        hand-computing its bytes.
+        """
+        from .traffic import wire_bytes_per_device
+        wb = wire_bytes_per_device(n_elements, mode, schedule, num_workers)
+        return self.exposed(n_elements, num_workers, wb,
+                            extra_service_s=extra_service_s)
+
 
 def envelope_sweep(n_elements: int = 8 << 20, num_workers: int = 32,
                    wire_bytes_per_device: float | None = None):

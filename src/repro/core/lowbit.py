@@ -256,10 +256,13 @@ def sign_of_mean(g: jax.Array, dp_axes: Axes) -> jax.Array:
 class LeafPolicy:
     """Resolved aggregation policy for one gradient leaf.
 
-    ``schedule`` may be a built-in :class:`Schedule` member or the string
-    name of any backend registered via ``repro.fabric.register_schedule``.
+    ``mode`` names the gradient codec (a built-in
+    :class:`AggregationMode` member or the string name of any codec
+    registered via ``repro.fabric.register_codec``); ``schedule`` may be
+    a built-in :class:`Schedule` member or the string name of any
+    backend registered via ``repro.fabric.register_schedule``.
     """
-    mode: AggregationMode
+    mode: AggregationMode | str
     schedule: Schedule | str
     model_spec: Any = None          # PartitionSpec over auto (TP) axes
     gate_phase: int = 0

@@ -1,26 +1,41 @@
-"""Aggregation modes and payload-bit accounting (paper Table 2).
+"""Aggregation modes, codec naming, and payload-bit accounting (Table 2).
 
-Modes name what the "controller" returns for an admitted gradient bucket:
+The representation axis is a *registry* — :mod:`repro.fabric.codecs` —
+and a "mode" is simply a codec name.  :class:`AggregationMode` survives
+as a behavior-identical deprecation shim naming the four built-in
+codecs (its values *are* their registry names), so existing plans,
+checkpoints, and controller decisions are unchanged:
 
-  * IDENTITY   — original bytes (functional read-back checks only).
-  * FP32       — full-precision mean aggregate (warm-up / calibration /
-                 recovery path).
-  * G_BINARY   — majority sign aggregate, u = sgn(2c - W).
-  * G_TERNARY  — ternary sign/zero aggregate, u = m * sgn(2c - W) with the
-                 fixed 2-of-3 zero gate.
+  * ``identity`` — original bytes (functional read-back checks only).
+  * ``fp32``     — full-precision mean aggregate (warm-up / calibration /
+                   recovery path).
+  * ``gbinary``  — majority sign aggregate, u = sgn(2c - W).
+  * ``gternary`` — ternary sign/zero aggregate, u = m * sgn(2c - W) with
+                   the fixed 2-of-3 zero gate.
 
-Payload accounting follows the paper's convention: ratios count the bits of
-the communicated gradient representation per element, normalized to FP32
-(32 bits).  G-Ternary is counted at log2(3) bits/element, which reproduces
-the paper's 0.0494 full-path ratio (Table 6).
+Payload accounting follows the paper's convention: ratios count the bits
+of the communicated gradient representation per element, normalized to
+FP32 (32 bits).  G-Ternary is counted at log2(3) bits/element, which
+reproduces the paper's 0.0494 full-path ratio (Table 6).  The numbers
+live on the codecs; :func:`bits_per_element` and :func:`traffic_ratio`
+resolve through the registry, so a registered codec (e.g. ``int4``)
+participates in every accounting surface automatically.
 """
 from __future__ import annotations
 
 import enum
-import math
+import warnings
 
 
 class AggregationMode(str, enum.Enum):
+    """Deprecation shim naming the four built-in codecs.
+
+    New representations register with
+    :func:`repro.fabric.codecs.register_codec` and are addressed by
+    string name everywhere a mode is accepted; this enum is kept so
+    existing plans/checkpoints (and the Fig-6 pilot decisions) resolve
+    unchanged.
+    """
     IDENTITY = "identity"
     FP32 = "fp32"
     G_BINARY = "gbinary"
@@ -28,33 +43,56 @@ class AggregationMode(str, enum.Enum):
 
     @property
     def is_lowbit(self) -> bool:
+        warnings.warn(
+            "AggregationMode.is_lowbit is deprecated: ask the codec "
+            "registry instead (get_codec(mode).reduction == 'vote')",
+            DeprecationWarning, stacklevel=2)
         return self in (AggregationMode.G_BINARY, AggregationMode.G_TERNARY)
 
 
-#: Communicated payload bits per gradient element, per mode.
-BITS_PER_ELEMENT = {
-    AggregationMode.IDENTITY: 32.0,
-    AggregationMode.FP32: 32.0,
-    AggregationMode.G_BINARY: 1.0,
-    AggregationMode.G_TERNARY: math.log2(3.0),
-}
+def codec_name(mode) -> str:
+    """Canonical codec-registry key for a mode given as enum or string.
+
+    The representation analogue of :func:`schedule_name` — plans may
+    name codecs outside the built-in :class:`AggregationMode` shim; any
+    codec registered via ``repro.fabric.register_codec`` is addressable
+    by its string name.
+    """
+    return mode.value if isinstance(mode, enum.Enum) else str(mode)
 
 
-def bits_per_element(mode: AggregationMode) -> float:
-    return BITS_PER_ELEMENT[AggregationMode(mode)]
+def canonical_mode(mode):
+    """Normalize a codec name: built-ins to their enum member, else str.
+
+    Keeps :class:`AggregationMode` members flowing through policies,
+    bucket keys, and checkpoints exactly as before the codec registry
+    (repr/hash stable), while letting registered codec names pass
+    through as plain strings.
+    """
+    try:
+        return AggregationMode(mode)
+    except ValueError:
+        return str(mode)
 
 
-def traffic_ratio(mode: AggregationMode) -> float:
+def bits_per_element(mode) -> float:
+    """Communicated payload bits per gradient element, per codec."""
+    from ..fabric.codecs import get_codec
+    return get_codec(mode).bits_per_element
+
+
+def traffic_ratio(mode) -> float:
     """Payload ratio vs the same-runner FP32 baseline (paper Section 4)."""
     return bits_per_element(mode) / 32.0
 
 
 class Schedule(str, enum.Enum):
-    """Concrete collective schedule implementing a mode on the mesh.
+    """Concrete collective schedule implementing a codec on the mesh.
 
-    The *mode* fixes the returned aggregate's semantics; the *schedule* fixes
-    the bytes that actually cross ICI links (reported separately in the
-    roofline, mirroring the paper's payload-vs-service-path split).
+    The *codec* fixes the returned aggregate's semantics; the *schedule*
+    fixes the bytes that actually cross ICI links (reported separately
+    in the roofline, mirroring the paper's payload-vs-service-path
+    split).
     """
     #: FP32: XLA psum (ring reduce-scatter + all-gather under the hood).
     PSUM = "psum"
@@ -64,14 +102,6 @@ class Schedule(str, enum.Enum):
     #: majority -> all-gather packed result (the CXL write/aggregate/read
     #: response path mapped onto ICI collectives).
     PACKED_A2A = "packed_a2a"
-
-
-DEFAULT_SCHEDULE = {
-    AggregationMode.IDENTITY: Schedule.PSUM,
-    AggregationMode.FP32: Schedule.PSUM,
-    AggregationMode.G_BINARY: Schedule.VOTE_PSUM,
-    AggregationMode.G_TERNARY: Schedule.VOTE_PSUM,
-}
 
 
 def schedule_name(schedule) -> str:
@@ -84,32 +114,69 @@ def schedule_name(schedule) -> str:
     return schedule.value if isinstance(schedule, enum.Enum) else str(schedule)
 
 
-#: built-in schedules that only carry low-bit payloads; FP32/IDENTITY
-#: buckets nominally on one of these ride the psum bypass instead.
-_LOWBIT_ONLY_SCHEDULES = frozenset(
+#: built-in schedules that only carry sign-vote payloads; mean-reduction
+#: codecs nominally on one of these ride the psum bypass instead.
+_VOTE_ONLY_SCHEDULES = frozenset(
     {Schedule.VOTE_PSUM.value, Schedule.PACKED_A2A.value})
 
 
-def wire_schedule(mode, schedule):
-    """Wire-level schedule actually used for a (mode, schedule) pair.
+def wire_schedule(mode, schedule) -> str:
+    """Wire-level schedule name actually used for a (codec, schedule) pair.
 
-    Two mode/schedule mismatches are normalized, both preserving the
+    Always returns the canonical *string* name (the registry key; the
+    old version leaked a ``Schedule.PSUM`` enum on one normalization
+    branch and the caller's original enum-or-string otherwise).  Two
+    codec/schedule mismatches are normalized, both preserving the
     pre-registry dispatch semantics:
 
-      * FP32/IDENTITY aggregates carried on a built-in low-bit schedule
-        (vote_psum / packed_a2a) travel on the psum path — the paper's
-        bypass semantics (and what the 4-bytes/element wire accounting
-        assumes);
-      * low-bit aggregates nominally on ``psum`` travel on the dense
-        vote_psum path (a 1-bit mode has no FP32-mean realization).
+      * mean-reduction codecs (FP32/IDENTITY/quantizers) carried on a
+        built-in vote schedule (vote_psum / packed_a2a) travel on the
+        psum path — the paper's bypass semantics (and what the
+        codec-bytes/element wire accounting assumes);
+      * vote-reduction codecs nominally on ``psum`` travel on the dense
+        vote_psum path (a sign-vote codec has no FP32-mean realization).
 
     Every other schedule — including registered custom backends such as
-    the ``sign_of_mean`` baseline — dispatches as named for every mode.
+    the ``sign_of_mean`` baseline — dispatches as named for every codec.
     """
-    lowbit = AggregationMode(mode).is_lowbit
+    from ..fabric.codecs import get_codec
+    votes = get_codec(mode).reduction == "vote"
     name = schedule_name(schedule)
-    if not lowbit and name in _LOWBIT_ONLY_SCHEDULES:
-        return Schedule.PSUM
-    if lowbit and name == Schedule.PSUM.value:
-        return Schedule.VOTE_PSUM
-    return schedule
+    if not votes and name in _VOTE_ONLY_SCHEDULES:
+        return Schedule.PSUM.value
+    if votes and name == Schedule.PSUM.value:
+        return Schedule.VOTE_PSUM.value
+    return name
+
+
+# ---------------------------------------------------------------------------
+# deprecated module-level tables (pre-codec-registry API)
+# ---------------------------------------------------------------------------
+
+def _legacy_bits_per_element() -> dict:
+    from ..fabric.codecs import get_codec
+    return {m: get_codec(m).bits_per_element for m in AggregationMode}
+
+
+def _legacy_default_schedule() -> dict:
+    from ..fabric.codecs import get_codec
+    return {m: Schedule(get_codec(m).default_schedule)
+            for m in AggregationMode}
+
+
+def __getattr__(name: str):
+    if name == "BITS_PER_ELEMENT":
+        warnings.warn(
+            "core.modes.BITS_PER_ELEMENT is deprecated: bits/element live "
+            "on the codecs — use bits_per_element(mode) or "
+            "repro.fabric.get_codec(mode).bits_per_element",
+            DeprecationWarning, stacklevel=2)
+        return _legacy_bits_per_element()
+    if name == "DEFAULT_SCHEDULE":
+        warnings.warn(
+            "core.modes.DEFAULT_SCHEDULE is deprecated: the default "
+            "transport lives on the codecs — use "
+            "repro.fabric.get_codec(mode).default_schedule",
+            DeprecationWarning, stacklevel=2)
+        return _legacy_default_schedule()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -27,8 +27,12 @@ from .modes import (AggregationMode, Schedule, bits_per_element,
 # payload accounting (paper's ratios)
 # ---------------------------------------------------------------------------
 
-def payload_bytes(n_elements: int, mode: AggregationMode) -> float:
-    """Communicated payload bytes for one aggregation of n elements."""
+def payload_bytes(n_elements: int, mode: AggregationMode | str) -> float:
+    """Communicated payload bytes for one aggregation of n elements.
+
+    ``mode`` is a codec name (built-in enum member or any registered
+    codec); the bits/element figure lives on the codec.
+    """
     return n_elements * bits_per_element(mode) / 8.0
 
 
@@ -37,7 +41,9 @@ def plan_traffic_ratio(sizes: Mapping[str, int], plan: AdmissionPlan) -> float:
 
     Reproduces the paper's Table 6 accounting: e.g. for ResNet-18/CIFAR-100
     (backbone ~99.54% of params) a G-Binary backbone + FP32 head plan yields
-    ~0.0357, and full-path G-Binary yields 0.0313 (= 1/32).
+    ~0.0357, and full-path G-Binary yields 0.0313 (= 1/32).  Bits per
+    element resolve through the codec registry, so plans naming a
+    registered codec (e.g. ``int4``) are accounted automatically.
     """
     total = sum(sizes.values())
     if total == 0:
@@ -51,16 +57,22 @@ def plan_traffic_ratio(sizes: Mapping[str, int], plan: AdmissionPlan) -> float:
 # wire-byte models per schedule (per-device bytes crossing links)
 # ---------------------------------------------------------------------------
 
-def wire_bytes_per_device(n_elements: int, mode: AggregationMode,
+def wire_bytes_per_device(n_elements: int, mode: AggregationMode | str,
                           schedule: Schedule | str, num_workers: int,
                           dtype_bytes: int = 4) -> float:
     """Ring-model bytes per device for one aggregation of n elements.
 
     The model lives on the schedule backend (its
     ``wire_bytes_per_device`` method) so byte accounting and dispatch
-    can never disagree.  The built-ins:
+    can never disagree; mean transports price the *codec's* payload
+    bytes (``get_codec(mode).payload_bytes``), so a registered codec is
+    accounted without touching any backend.  ``dtype_bytes`` is a
+    legacy knob kept for custom backends — every built-in prices the
+    codec's wire payload (the FP32 bypass always ships fp32 regardless
+    of storage dtype) and ignores it.  The built-ins:
 
-    fp32 psum        : 2 (W-1)/W * 4N          (reduce-scatter + all-gather)
+    psum             : 2 (W-1)/W * codec bytes  (reduce-scatter + all-gather;
+                                                 4N for fp32, 0.5N for int4)
     vote_psum (int8) : 2 (W-1)/W * 1N
     packed_a2a       : (W-1)/W * (N/8)          all_to_all of packed signs
                        + (W-1)/W * (N/4)        all-gather of sign+mask words

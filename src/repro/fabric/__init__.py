@@ -1,10 +1,15 @@
 """NEURON-Fabric session API: one control surface over aggregation.
 
+  * :mod:`codecs`   — :class:`Codec` protocol + the ``@register_codec``
+    registry: *what bits go on the wire* (built-ins ``identity``,
+    ``fp32``, ``gbinary``, ``gternary``; :mod:`extra_codecs` adds
+    ``int4`` and ``topk`` through the same public seam);
   * :mod:`registry` — :class:`ScheduleBackend` protocol + the
-    ``@register_schedule`` registry (the extension seam for new
-    collectives);
-  * :mod:`backends` — built-in backends: ``psum``/``fp32``,
-    ``vote_psum``, ``packed_a2a``, plus the Section-9 baselines;
+    ``@register_schedule`` registry: *how the bytes move* (the
+    extension seam for new collectives);
+  * :mod:`backends` — built-in codec-parametric transports:
+    ``psum``/``fp32``, ``vote_psum``, ``packed_a2a``, plus the
+    Section-9 baselines;
   * :mod:`session`  — the :class:`Fabric` session object owning worker
     count, policy resolution, EF state, registry dispatch, and the
     per-plan jit cache;
@@ -20,10 +25,15 @@ Quick use::
     step = fabric.step_for(cfg, optimizer, plan, params)   # cached jit
     agg, ef = fabric.aggregate(grads, plan, ef)            # in shard_map
 """
+from .codecs import (Codec, CodecLane, GradientCodec, MaskGate,
+                     available_codecs, get_codec, register_codec,
+                     resolve_leaf_gate_mask, ring_wire_bytes,
+                     unregister_codec)
 from .registry import (AggregationContext, ScheduleBackend,
                        available_schedules, get_schedule, register_schedule,
                        unregister_schedule)
 from . import backends as _backends          # registers the built-ins
+from . import extra_codecs as _extra_codecs  # registers int4 / topk
 from .session import (CompiledStep, Fabric, TrainState, aggregate_leaf,
                       aggregate_tree, aggregate_tree_bucketed,
                       dp_num_workers)
@@ -35,6 +45,9 @@ from .control import (Controller, ControlEvent, FP32Controller,
                       unregister_controller)
 
 __all__ = [
+    "Codec", "CodecLane", "GradientCodec", "MaskGate", "available_codecs",
+    "get_codec", "register_codec", "resolve_leaf_gate_mask",
+    "ring_wire_bytes", "unregister_codec",
     "AggregationContext", "ScheduleBackend", "available_schedules",
     "get_schedule", "register_schedule", "unregister_schedule",
     "CompiledStep", "Fabric", "TrainState", "aggregate_leaf",

@@ -5,14 +5,21 @@ in the uniform ``aggregate(ctx, g, policy, ef)`` signature.  The Section-9
 baselines (MajoritySignSGD, SignOfMean) are registered too, so experiment
 plans can select them by name exactly like the production schedules.
 
+Backends are *codec-parametric*: the transport never branches on a mode
+enum — it resolves the policy's codec (:mod:`repro.fabric.codecs`) and
+asks it for encode/decode (mean transports), the zero gate (vote
+transports), and the payload bytes (wire accounting).  A registered
+codec therefore rides every compatible transport without any edit here.
+
 All built-ins are **fusable**: they additionally implement
-``aggregate_flat(ctx, flat, ternary=..., gate=...)`` over a 1-D
-bucket payload, which is what the bucketed aggregation path
+``aggregate_flat(ctx, flat, codec, gate=...)`` over a 1-D bucket
+payload, which is what the bucketed aggregation path
 (:func:`repro.fabric.session.aggregate_tree_bucketed`) calls — one
 collective launch per 32 MiB bucket instead of one per gradient leaf.
-``threads_ef`` marks the backends that consume error feedback; the bucket
-layer injects/updates EF residuals per leaf around the fused collective
-so EF semantics stay bit-identical to the per-leaf path.
+``threads_ef`` marks the transports able to carry error feedback (the
+codec's own ``threads_ef`` flag must agree); the bucket layer
+injects/updates EF residuals per leaf around the fused collective so EF
+semantics stay bit-identical to the per-leaf path.
 """
 from __future__ import annotations
 
@@ -20,33 +27,41 @@ import jax.numpy as jnp
 
 from ..core.lowbit import (fp32_allreduce, lowbit_packed_a2a,
                            lowbit_vote_psum, sign_of_mean)
-from ..core.modes import AggregationMode, Schedule
+from ..core.modes import Schedule
+from .codecs import get_codec, resolve_leaf_gate_mask, ring_wire_bytes
 from .registry import AggregationContext, register_schedule
-
-
-def _ternary(policy) -> bool:
-    return AggregationMode(policy.mode) == AggregationMode.G_TERNARY
 
 
 @register_schedule(Schedule.PSUM, "fp32")
 class Fp32AllreduceBackend:
-    """FP32 mean via XLA psum — the paper's bypass / calibration path."""
+    """Mean transport via XLA psum — the paper's bypass / calibration path.
+
+    Mean-reduction codecs plug in around the collective: the per-worker
+    payload is ``codec.encode(g)``, the psum averages it, and
+    ``codec.decode`` runs on the mean (both identity for the FP32 and
+    IDENTITY codecs, hence bit-identical to the pre-codec path).
+    """
 
     name = "psum"
     fusable = True
     threads_ef = False
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
-        return fp32_allreduce(g, ctx.dp_axes), ef
+        codec = get_codec(policy.mode)
+        u = codec.decode(ctx, fp32_allreduce(codec.encode(ctx, g),
+                                             ctx.dp_axes))
+        return u, ef
 
-    def aggregate_flat(self, ctx: AggregationContext, flat, *,
-                       ternary: bool = False, gate=None):
-        return fp32_allreduce(flat, ctx.dp_axes)
+    def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
+                       gate=None):
+        return codec.decode(ctx, fp32_allreduce(codec.encode(ctx, flat),
+                                                ctx.dp_axes))
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:
-        f = (num_workers - 1) / num_workers
-        return 2.0 * f * dtype_bytes * n_elements
+        # ring reduce-scatter + all-gather of the codec's wire payload
+        return ring_wire_bytes(get_codec(mode).payload_bytes(n_elements),
+                               num_workers)
 
 
 @register_schedule(Schedule.VOTE_PSUM, "majority_sign_sgd")
@@ -55,6 +70,9 @@ class VotePsumBackend:
 
     Registered under ``majority_sign_sgd`` too: the software baseline is
     update-rule-identical to G-Binary on this schedule (paper Section 9).
+    The codec contributes the majority-stage gate: ``codec.gated``
+    selects the ternary leg, and ``codec.leaf_gate_mask`` may supply an
+    explicit keep pattern overriding the built-in 2-of-3 one.
     """
 
     name = "vote_psum"
@@ -62,17 +80,21 @@ class VotePsumBackend:
     threads_ef = True
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        codec = get_codec(policy.mode)
+        mask = resolve_leaf_gate_mask(codec, g.shape, policy.gate_phase)
+        gate = None if mask is None else \
+            jnp.asarray(mask, g.dtype).reshape(g.shape)
         return lowbit_vote_psum(
-            g, ctx.dp_axes, ctx.num_workers, ternary=_ternary(policy),
-            gate_phase=policy.gate_phase, ef=ef)
+            g, ctx.dp_axes, ctx.num_workers, ternary=codec.gated,
+            gate_phase=policy.gate_phase, gate=gate, ef=ef)
 
-    def aggregate_flat(self, ctx: AggregationContext, flat, *,
-                       ternary: bool = False, gate=None):
+    def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
+                       gate=None):
         # gate.vector builds the concatenated per-leaf pattern on device
         # (iota + mod), avoiding a bucket-sized host constant per step
         gv = None if gate is None else gate.vector(jnp.float32)
         u, _ = lowbit_vote_psum(flat, ctx.dp_axes, ctx.num_workers,
-                                ternary=ternary, gate=gv)
+                                ternary=codec.gated, gate=gv)
         return u
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
@@ -85,8 +107,7 @@ class VotePsumBackend:
         4x this figure; a controller-side popcount (or a staged int8
         reduce) moves the modeled amount.
         """
-        f = (num_workers - 1) / num_workers
-        return 2.0 * f * 1.0 * n_elements
+        return ring_wire_bytes(1.0 * n_elements, num_workers)
 
 
 @register_schedule(Schedule.PACKED_A2A)
@@ -98,26 +119,33 @@ class PackedA2ABackend:
     threads_ef = True
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        codec = get_codec(policy.mode)
+        # a custom leaf gate packs into gate words exactly like the fused
+        # path, so both vote transports zero the same elements (the
+        # packed path needs a fully local payload for gate masks)
         return lowbit_packed_a2a(
             g, ctx.dp_axes, ctx.num_workers,
             model_spec=getattr(policy, "model_spec", None),
-            ternary=_ternary(policy), gate_phase=policy.gate_phase, ef=ef,
-            interpret=ctx.interpret)
+            ternary=codec.gated, gate_phase=policy.gate_phase,
+            gate_mask=resolve_leaf_gate_mask(codec, g.shape,
+                                             policy.gate_phase),
+            ef=ef, interpret=ctx.interpret)
 
-    def aggregate_flat(self, ctx: AggregationContext, flat, *,
-                       ternary: bool = False, gate=None):
+    def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
+                       gate=None):
         # the packed schedule needs the host mask to pack gate words
         # (1 bit/element once packed — see gate_words_from_mask)
         mask = None if gate is None else gate.mask()
         u, _ = lowbit_packed_a2a(flat, ctx.dp_axes, ctx.num_workers,
-                                 ternary=ternary, gate_mask=mask,
+                                 ternary=codec.gated, gate_mask=mask,
                                  interpret=ctx.interpret)
         return u
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:
-        f = (num_workers - 1) / num_workers
-        return f * (n_elements / 8.0) + f * (n_elements / 4.0)
+        # all_to_all of packed signs + all-gather of sign+mask words
+        return (ring_wire_bytes(n_elements / 8.0, num_workers, trips=1.0)
+                + ring_wire_bytes(n_elements / 4.0, num_workers, trips=1.0))
 
 
 @register_schedule("sign_of_mean")
@@ -131,11 +159,15 @@ class SignOfMeanBackend:
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         return sign_of_mean(g, ctx.dp_axes), ef
 
-    def aggregate_flat(self, ctx: AggregationContext, flat, *,
-                       ternary: bool = False, gate=None):
+    def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
+                       gate=None):
         return sign_of_mean(flat, ctx.dp_axes)
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
                               dtype_bytes: int = 4) -> float:
-        f = (num_workers - 1) / num_workers
-        return 2.0 * f * dtype_bytes * n_elements
+        # the full-precision reduction has already happened: FP32 wire
+        # cost regardless of the nominal codec (paper Section 9) —
+        # priced like the psum transport's fp32 payload, ignoring the
+        # legacy dtype_bytes knob for the same reason it does
+        return ring_wire_bytes(get_codec("fp32").payload_bytes(n_elements),
+                               num_workers)

@@ -41,7 +41,8 @@ from typing import Any, Callable, Mapping, Protocol, Sequence, \
 from ..core.admission import (Commander, ControlEvent, CusumGuard, Predictor,
                               Supervisor)
 from ..core.buckets import AdmissionPlan, GroupPolicy
-from ..core.modes import AggregationMode, Schedule, schedule_name
+from ..core.modes import (AggregationMode, Schedule, canonical_mode,
+                          codec_name, schedule_name)
 
 __all__ = [
     "Controller", "ControlEvent", "FP32Controller", "PaperController",
@@ -107,7 +108,7 @@ _TUPLE_TAG = "__tuple__"
 def plan_to_jsonable(plan: AdmissionPlan) -> dict:
     """AdmissionPlan -> JSON-serializable dict (for checkpoint manifests)."""
     def enc(p: GroupPolicy) -> dict:
-        return {"mode": p.mode.value,
+        return {"mode": codec_name(p.mode),
                 "schedule": (None if p.schedule is None
                              else schedule_name(p.schedule)),
                 "error_feedback": bool(p.error_feedback)}
@@ -127,7 +128,9 @@ def plan_from_jsonable(obj: dict) -> AdmissionPlan:
                 sched = Schedule(sched)  # registered custom-backend name
             except ValueError:
                 pass
-        return GroupPolicy(AggregationMode(d["mode"]), sched,
+        # built-in codecs decode to their enum member, registered codec
+        # names pass through as strings — signature-preserving either way
+        return GroupPolicy(canonical_mode(d["mode"]), sched,
                            bool(d["error_feedback"]))
 
     return AdmissionPlan(
@@ -172,8 +175,15 @@ def plan_presets(error_feedback: bool = False) -> dict[str, AdmissionPlan]:
     schedule; ``*_packed`` pin the packed controller schedule on the ICI;
     ``gbin_packed_embed`` additionally admits the (huge) embedding tables
     while keeping head+norms on FP32 (validated in the convergence
-    bench).  Mode-default-schedule presets (``gbin_backbone`` etc.) leave
-    the schedule to :data:`~repro.core.modes.DEFAULT_SCHEDULE`.
+    bench).  Codec-default-schedule presets (``gbin_backbone`` etc.)
+    leave the schedule to the codec's ``default_schedule``.  Plans name
+    codecs by string exactly like schedules/controllers —
+    ``int4_backbone`` / ``topk_backbone`` select the registered
+    extension codecs (:mod:`repro.fabric.extra_codecs`); like the
+    ``fp32`` preset they pin ``error_feedback=False`` regardless of the
+    argument (both codecs declare ``threads_ef=False`` — EF-signSGD
+    residuals only thread through the vote codecs, so requesting EF
+    would allocate residual buffers that never update).
     """
     ef = error_feedback
     packed = Schedule.PACKED_A2A
@@ -199,6 +209,11 @@ def plan_presets(error_feedback: bool = False) -> dict[str, AdmissionPlan]:
             {"backbone": GroupPolicy(AggregationMode.G_BINARY, packed, ef),
              "embed": GroupPolicy(AggregationMode.G_BINARY, packed, ef)},
             default=GroupPolicy(AggregationMode.FP32)),
+        # registered extension codecs, addressed purely by name;
+        # error_feedback deliberately not forwarded (threads_ef=False
+        # codecs — see the docstring)
+        "int4_backbone": AdmissionPlan.lowbit_backbone("int4"),
+        "topk_backbone": AdmissionPlan.lowbit_backbone("topk"),
     }
 
 

@@ -59,20 +59,28 @@ class ScheduleBackend(Protocol):
     additionally expose ``wire_bytes_per_device(n_elements, mode,
     num_workers, dtype_bytes)`` to participate in the traffic model.
 
+    **Codecs.**  Backends are transport-only: the payload contract
+    (encode/decode, reduction kind, gate, bits/element) lives on the
+    policy's *codec* (:mod:`repro.fabric.codecs`).  Resolve it with
+    ``get_codec(policy.mode)`` and consult its hooks instead of
+    branching on a mode enum.
+
     **Bucket fusion (opt-in).**  A backend that sets ``fusable = True``
     must also implement
 
-        aggregate_flat(ctx, flat, *, ternary=False, gate=None)
+        aggregate_flat(ctx, flat, codec, *, gate=None)
 
     over a 1-D bucket payload (the concatenation of compatible leaves)
-    and return the 1-D aggregate.  ``gate`` is a
-    :class:`~repro.core.buckets.BucketGate` carrying the concatenated
-    per-leaf ternary gates (None for binary/FP32 buckets); call
-    ``gate.vector(dtype)`` for an on-device keep vector or
+    and return the 1-D aggregate.  ``codec`` is the bucket's resolved
+    :class:`~repro.fabric.codecs.Codec`; ``gate`` is the codec's bucket
+    zero gate (e.g. :class:`~repro.core.buckets.BucketGate` carrying
+    the concatenated per-leaf ternary gates; None for ungated codecs) —
+    call ``gate.vector(dtype)`` for an on-device keep vector or
     ``gate.mask()`` for the host boolean array (packed-word schedules).
     ``threads_ef = True`` declares that the per-leaf ``aggregate``
     consumes error feedback; the bucket layer then injects/updates EF
-    residuals per leaf around the fused collective (the backend's
+    residuals per leaf around the fused collective — but only for
+    codecs whose own ``threads_ef`` flag agrees (the backend's
     ``aggregate_flat`` never sees EF).  Backends without ``fusable``
     simply stay on the per-leaf path.
     """
@@ -91,7 +99,10 @@ def register_schedule(name: Any, *aliases: Any, override: bool = False):
 
     Accepts a backend class (instantiated with no arguments) or a ready
     instance.  ``aliases`` register the same backend under extra names;
-    re-registering an existing name raises unless ``override=True``.
+    re-registering an existing name raises unless ``override=True``,
+    which replaces the named keys *and* removes any other aliases still
+    bound to the replaced instances (a plan naming a stale alias must
+    never silently resolve the old backend).
     """
     keys = [schedule_name(k) for k in (name, *aliases)]
 
@@ -106,6 +117,13 @@ def register_schedule(name: Any, *aliases: Any, override: bool = False):
                         f"schedule backend {key!r} already registered "
                         f"({type(_REGISTRY[key]).__name__}); pass "
                         f"override=True to replace it")
+        else:
+            replaced = {id(_REGISTRY[k]): _REGISTRY[k]
+                        for k in keys if k in _REGISTRY}
+            for old in replaced.values():
+                if old is not backend:
+                    for k in [k for k, v in _REGISTRY.items() if v is old]:
+                        del _REGISTRY[k]
         for key in keys:
             _REGISTRY[key] = backend
         return obj
@@ -114,8 +132,12 @@ def register_schedule(name: Any, *aliases: Any, override: bool = False):
 
 
 def unregister_schedule(name: Any) -> None:
-    """Remove a backend (primarily for tests tearing down toy schedules)."""
-    _REGISTRY.pop(schedule_name(name), None)
+    """Remove a backend and every alias bound to the same instance
+    (primarily for tests tearing down toy schedules)."""
+    backend = _REGISTRY.pop(schedule_name(name), None)
+    if backend is not None:
+        for key in [k for k, v in _REGISTRY.items() if v is backend]:
+            del _REGISTRY[key]
 
 
 def get_schedule(name: Any) -> ScheduleBackend:

@@ -33,7 +33,8 @@ from ..core.buckets import (AdmissionPlan, BucketLayout,
                             DEFAULT_BUCKET_BYTES, GroupRules, assign_groups,
                             group_sizes, plan_buckets, resolve_policies)
 from ..core.lowbit import _ef_update
-from ..core.modes import AggregationMode, schedule_name, wire_schedule
+from ..core.modes import codec_name, wire_schedule
+from .codecs import get_codec
 from .registry import AggregationContext, get_schedule
 
 Axes = Sequence[str] | str
@@ -57,6 +58,18 @@ def aggregate_leaf(ctx: AggregationContext, g: jax.Array, policy,
     return backend.aggregate(ctx, g, policy, ef)
 
 
+def _leaf_uses_ef(pol, e) -> bool:
+    """Does this leaf thread error feedback through its collective?
+
+    Requires the policy flag, a real residual leaf (not the scalar
+    sentinel), *and* a codec that consumes EF — the same gate the fused
+    path applies, so fused and per-leaf EF semantics agree for custom
+    codecs too (a ``threads_ef=False`` codec never injects/updates).
+    """
+    return (pol.error_feedback and e is not None and e.ndim > 0
+            and get_codec(pol.mode).threads_ef)
+
+
 def aggregate_tree(ctx: AggregationContext, grads: Any, policies: Any,
                    ef_states: Any | None = None):
     """Aggregate a gradient pytree leaf-by-leaf under resolved policies.
@@ -77,7 +90,7 @@ def aggregate_tree(ctx: AggregationContext, grads: Any, policies: Any,
 
     agg, new_ef = [], []
     for g, pol, e in zip(g_leaves, p_leaves, e_leaves):
-        use_ef = pol.error_feedback and e is not None and e.ndim > 0
+        use_ef = _leaf_uses_ef(pol, e)
         ef_in = e[0] if use_ef else None
         u, ef_out = aggregate_leaf(ctx, g, pol, ef=ef_in)
         agg.append(u)
@@ -145,10 +158,10 @@ def aggregate_tree_bucketed(ctx: AggregationContext, grads: Any,
     agg: list = [None] * len(g_leaves)
     new_ef = list(e_leaves)
 
-    # per-leaf fallback — same dispatch as aggregate_tree
+    # per-leaf fallback — same dispatch (and same EF gate) as aggregate_tree
     for uf in layout.unfused:
         g, pol, e = g_leaves[uf.leaf], p_leaves[uf.leaf], e_leaves[uf.leaf]
-        use_ef = pol.error_feedback and e is not None and e.ndim > 0
+        use_ef = _leaf_uses_ef(pol, e)
         u, ef_out = aggregate_leaf(ctx, g, pol, ef=e[0] if use_ef else None)
         agg[uf.leaf] = u
         if use_ef:
@@ -156,7 +169,9 @@ def aggregate_tree_bucketed(ctx: AggregationContext, grads: Any,
 
     for bucket in layout.buckets:
         backend = get_schedule(bucket.key.schedule)
-        threads_ef = getattr(backend, "threads_ef", False)
+        codec = get_codec(bucket.key.mode)
+        # EF rides the fused collective only when both axes can carry it
+        threads_ef = getattr(backend, "threads_ef", False) and codec.threads_ef
         flats, g_effs = [], {}
         for slot in bucket.slots:
             g = g_leaves[slot.leaf].reshape(-1)
@@ -167,9 +182,7 @@ def aggregate_tree_bucketed(ctx: AggregationContext, grads: Any,
                 g_effs[slot.leaf] = g
             flats.append(g)
         flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-        ternary = (AggregationMode(bucket.key.mode)
-                   == AggregationMode.G_TERNARY)
-        u_flat = backend.aggregate_flat(ctx, flat, ternary=ternary,
+        u_flat = backend.aggregate_flat(ctx, flat, codec,
                                         gate=bucket.gate())
         for slot in bucket.slots:
             u = u_flat[slot.offset:slot.offset + slot.size]
@@ -388,15 +401,20 @@ class Fabric:
         leaves, treedef = jax.tree_util.tree_flatten(params_like)
         pol_leaves = tuple(jax.tree_util.tree_flatten(
             policies, is_leaf=_is_policy)[0])
-        # the layout also depends on which backends currently fuse, so a
-        # backend swapped under the same name (register/unregister) must
-        # not hit a stale cached layout
-        wires = {schedule_name(wire_schedule(p.mode, p.schedule))
-                 for p in pol_leaves}
+        # the layout also depends on which backends currently fuse and on
+        # the codecs' layout-relevant attributes (reduction drives the
+        # wire schedule, gated drives gate-phase normalization), so a
+        # backend *or codec* swapped under the same name
+        # (register/unregister) must not hit a stale cached layout
+        wires = {wire_schedule(p.mode, p.schedule) for p in pol_leaves}
         fus_sig = tuple(sorted((w, _registry_fusable(w)) for w in wires))
+        modes = {codec_name(p.mode) for p in pol_leaves}
+        codec_sig = tuple(sorted(
+            (m, get_codec(m).reduction, bool(get_codec(m).gated))
+            for m in modes))
         key = (treedef,
                tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
-               pol_leaves, self.bucket_bytes, fus_sig)
+               pol_leaves, self.bucket_bytes, fus_sig, codec_sig)
         if key not in self._layouts:
             self._layouts[key] = plan_buckets(
                 params_like, policies, bucket_bytes=self.bucket_bytes,

@@ -24,7 +24,8 @@ import os
 #: validated against plan_presets() at startup
 _PLAN_CHOICES = ["fp32", "gbin_backbone", "gbin_vote", "gbin_packed",
                  "gter_backbone", "gter_vote", "lowbit_all",
-                 "gbin_packed_all", "gbin_packed_embed", "adaptive"]
+                 "gbin_packed_all", "gbin_packed_embed",
+                 "int4_backbone", "topk_backbone", "adaptive"]
 
 
 def main():

@@ -28,8 +28,8 @@ Quick use::
                              compute_time_s=1e-3)
     print(report.exposed_pct, report.link_utilization)
 """
-from .datapath import (DEFAULT_LANES, FLIT_BITS, PIPELINE_STAGES,
-                       FlitPipeline, LaneSpec, datapath_time)
+from .datapath import (FLIT_BITS, PIPELINE_STAGES, FlitPipeline, LaneSpec,
+                       datapath_time)
 from .engine import Engine, Resource, ResourcePool, ResourceStats
 from .scenarios import (PAPER_EXPOSED_BOUND_PCT, bandwidth_pressure_report,
                         full_miss_report, paper_operating_points)
@@ -40,8 +40,8 @@ from .trace import (LaunchRecord, LaunchSpec, SimReport,
                     layout_launch_specs, simulate_launches, simulate_layout)
 
 __all__ = [
-    "DEFAULT_LANES", "FLIT_BITS", "PIPELINE_STAGES", "FlitPipeline",
-    "LaneSpec", "datapath_time",
+    "FLIT_BITS", "PIPELINE_STAGES", "FlitPipeline", "LaneSpec",
+    "datapath_time",
     "Engine", "Resource", "ResourcePool", "ResourceStats",
     "PAPER_EXPOSED_BOUND_PCT", "bandwidth_pressure_report",
     "full_miss_report", "paper_operating_points",

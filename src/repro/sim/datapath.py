@@ -31,6 +31,7 @@ import dataclasses
 import math
 
 from ..core.modes import AggregationMode, bits_per_element
+from ..fabric.codecs import CodecLane
 
 #: Datapath flit width (bits) — the paper's 512-bit CXL-side datapath.
 FLIT_BITS = 512
@@ -38,25 +39,11 @@ FLIT_BITS = 512
 #: Pipeline depth — the paper's five-cycle datapath.
 PIPELINE_STAGES = 5
 
-
-@dataclasses.dataclass(frozen=True)
-class LaneSpec:
-    """Per-mode lane behaviour inside the shared flit pipeline."""
-    name: str
-    #: flits issued per initiation interval slot (usually 1).
-    initiation_interval: float = 1.0
-    #: extra stall cycles charged per flit (gate fetch, bypass hazards).
-    stall_cycles_per_flit: float = 0.0
-
-
-#: Built-in lane table; unknown modes fall back to the bypass lane.
-DEFAULT_LANES: dict[AggregationMode, LaneSpec] = {
-    AggregationMode.G_BINARY: LaneSpec("sign_count"),
-    AggregationMode.G_TERNARY: LaneSpec("ternary_gated",
-                                        stall_cycles_per_flit=1.0),
-    AggregationMode.FP32: LaneSpec("fp32_bypass"),
-    AggregationMode.IDENTITY: LaneSpec("fp32_bypass"),
-}
+#: Per-codec lane behaviour inside the shared flit pipeline — one
+#: dataclass serves both layers: codecs declare their lane as a
+#: :class:`~repro.fabric.codecs.CodecLane` and the pipeline consumes it
+#: directly; ``LaneSpec`` is the sim-side name for the same type.
+LaneSpec = CodecLane
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,12 +63,21 @@ class FlitPipeline:
     miss_stall_cycles: float = 0.0
 
     def lane(self, mode: AggregationMode | str) -> LaneSpec:
-        return DEFAULT_LANES.get(AggregationMode(mode),
-                                 DEFAULT_LANES[AggregationMode.FP32])
+        """Lane descriptor for a codec name — from the codec registry.
+
+        A registered codec's :class:`~repro.fabric.codecs.CodecLane`
+        rides the pipeline directly (so new codecs time correctly with
+        no edits here).  Unregistered names raise the registry's
+        canonical KeyError — the same error :meth:`flits` hits through
+        ``bits_per_element`` — rather than silently timing on a
+        fallback lane.
+        """
+        from ..fabric.codecs import get_codec
+        return get_codec(mode).lane
 
     def flits(self, n_elements: int, mode: AggregationMode | str) -> int:
         """512-bit flits needed for one launch's wire payload."""
-        bits = n_elements * bits_per_element(AggregationMode(mode))
+        bits = n_elements * bits_per_element(mode)
         return max(1, math.ceil(bits / self.flit_bits))
 
     def cycles(self, n_elements: int, num_workers: int,

@@ -32,7 +32,7 @@ import dataclasses
 from typing import Any, Sequence
 
 from ..core.buckets import BucketLayout
-from ..core.modes import AggregationMode, schedule_name
+from ..core.modes import AggregationMode, codec_name, schedule_name
 from ..core.traffic import wire_bytes_per_device
 from .datapath import FlitPipeline, datapath_time
 from .engine import Engine, ResourcePool
@@ -41,9 +41,13 @@ from .topology import get_topology
 
 @dataclasses.dataclass(frozen=True)
 class LaunchSpec:
-    """One collective launch to simulate (a fused bucket or a leaf)."""
+    """One collective launch to simulate (a fused bucket or a leaf).
+
+    ``mode`` is a codec name (built-in enum member or any registered
+    codec) — the datapath resolves its lane/flit timing from the codec.
+    """
     name: str
-    mode: AggregationMode
+    mode: AggregationMode | str
     schedule: str
     n_elements: int
     wire_bytes: float
@@ -223,7 +227,7 @@ def simulate_launches(specs: Sequence[LaunchSpec], num_workers: int, *,
                  datapath_time(datapath, spec.n_elements, num_workers,
                                spec.mode))
         rec = LaunchRecord(
-            index=i, name=spec.name, mode=AggregationMode(spec.mode).value,
+            index=i, name=spec.name, mode=codec_name(spec.mode),
             schedule=schedule_name(spec.schedule),
             n_elements=int(spec.n_elements),
             wire_bytes=float(spec.wire_bytes), ready_s=float(spec.ready_s),
@@ -270,7 +274,7 @@ def layout_launch_specs(layout: BucketLayout, num_workers: int, *,
     leaves); ``ready_times`` overrides the default evenly-spaced
     emission of buckets across the backward pass (``compute_time_s``).
     """
-    entries = [(f"bucket:{i}:{b.key.mode.value}", b.key, b.size)
+    entries = [(f"bucket:{i}:{codec_name(b.key.mode)}", b.key, b.size)
                for i, b in enumerate(layout.buckets)]
     entries += [(f"leaf:{u.name}", u.key, u.size) for u in layout.unfused]
     n = len(entries)

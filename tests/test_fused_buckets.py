@@ -290,7 +290,7 @@ def test_layout_cache_invalidated_when_backend_swapped(rng):
         def aggregate(self, ctx, g, policy, ef=None):
             return g, ef
 
-        def aggregate_flat(self, ctx, flat, *, ternary=False, gate=None):
+        def aggregate_flat(self, ctx, flat, codec, *, gate=None):
             return flat
 
     try:

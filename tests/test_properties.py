@@ -127,3 +127,86 @@ def test_ternary_gate_keeps_two_of_three(m, phase):
     np.testing.assert_array_equal(bits, ((idx + phase) % 3 != 2))
     kept = bits.mean()
     assert abs(kept - 2 / 3) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack plane layout on ragged sizes (padding/truncation edges the
+# fused bucket path relies on)
+# ---------------------------------------------------------------------------
+
+#: deliberately awkward sizes: 1, sub-tile, off-by-one around the
+#: LANE*32 tile boundary, and multi-tile ragged tails
+ragged_n = st.one_of(
+    st.integers(1, 2 * ref.TILE + 1),
+    st.sampled_from([ref.TILE - 1, ref.TILE, ref.TILE + 1,
+                     2 * ref.TILE - 1, 3 * ref.TILE + 17, ref.LANE + 3]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=ragged_n, seed=st.integers(0, 2**31 - 1))
+def test_plane_roundtrip_any_size(n, seed):
+    """to_plane zero-pads to the canonical tile; from_plane drops exactly
+    the padding — a lossless round trip for every ragged size."""
+    rng = np.random.RandomState(seed)
+    flat = jnp.asarray(rng.randn(n), jnp.float32)
+    plane = ref.to_plane(flat)
+    assert plane.shape == (ref.padded_len(n) // ref.LANE, ref.LANE)
+    assert plane.shape[0] % ref.PACK == 0          # word-plane compatible
+    back = ref.from_plane(plane, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+    # the padding region is exactly zero (sign bit 0 = non-positive)
+    pad = np.asarray(plane).reshape(-1)[n:]
+    assert not pad.size or not pad.any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=ragged_n, seed=st.integers(0, 2**31 - 1))
+def test_sign_pack_roundtrip_ragged(n, seed):
+    """pack_signs on a ragged payload: the first n bits are the signs,
+    every padding bit is 0 (zero padding is non-positive)."""
+    rng = np.random.RandomState(seed)
+    flat = jnp.asarray(rng.randn(n), jnp.float32)
+    words = ref.sign_pack(ref.to_plane(flat))
+    bits = np.asarray(ref.unpack_bits(words)).reshape(-1)
+    np.testing.assert_array_equal(bits[:n],
+                                  (np.asarray(flat) > 0).astype(np.uint32))
+    assert not bits[n:].any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=ragged_n, seed=st.integers(0, 2**31 - 1),
+       extra_rows=st.integers(0, 3))
+def test_gate_words_from_mask_roundtrip_ragged(n, seed, extra_rows):
+    """gate_words_from_mask on sizes not a multiple of the word-plane
+    tile: bits [0, n) reproduce the mask, canonical padding keeps = 1,
+    and pad_words right-pads with all-ones rows (the all_to_all row
+    padding of the fused packed schedule)."""
+    rng = np.random.RandomState(seed)
+    keep = rng.rand(n) < 0.5
+    base_rows = ref.padded_len(n) // ref.LANE // ref.PACK
+    pad_words = base_rows + extra_rows
+    words = ref.gate_words_from_mask(keep, pad_words=pad_words)
+    assert words.shape == (pad_words, ref.LANE)
+    bits = np.asarray(ref.unpack_bits(words)).reshape(-1)
+    np.testing.assert_array_equal(bits[:n], keep.astype(np.uint32))
+    # canonical padding and pad_words rows all keep (gate never zeroes
+    # out-of-payload elements — unpack drops them, value irrelevant)
+    assert bits[n:].all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=ragged_n, phase=st.integers(0, 2), seed=st.integers(0, 2**31 - 1))
+def test_gate_words_match_bucket_gate_mask(n, phase, seed):
+    """The packed gate words and the BucketGate host mask/device vector
+    agree bit-for-bit on ragged per-leaf segments — the invariant that
+    keeps the fused ternary path identical across schedules."""
+    from repro.core.buckets import BucketGate
+    n2 = max(1, n // 2)
+    gate = BucketGate(segments=((n, phase), (n2, phase)))
+    mask = gate.mask()
+    assert mask.shape == (n + n2,)
+    words = ref.gate_words_from_mask(mask)
+    bits = np.asarray(ref.unpack_bits(words)).reshape(-1)
+    np.testing.assert_array_equal(bits[:n + n2], mask.astype(np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(gate.vector(jnp.float32)), mask.astype(np.float32))
