@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_hardware     — Table 7 / Fig 8 (datapath cost analogue)
   bench_roofline     — §Roofline source (reads results/dryrun)
   bench_sim          — repro.sim scenario sweep (writes BENCH_sim.json)
+  bench_serve        — repro.serve trace replay (writes BENCH_serve.json)
 
 Usage: python -m benchmarks.run [--only datapath,comm_model]
 """
@@ -18,7 +19,7 @@ import sys
 import time
 
 MODULES = ("datapath", "functional", "hardware", "comm_model", "sim",
-           "roofline", "recovery", "convergence")
+           "serve", "roofline", "recovery", "convergence")
 
 
 def main() -> None:

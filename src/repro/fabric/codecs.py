@@ -65,6 +65,7 @@ from typing import Any, Protocol, runtime_checkable
 import numpy as np
 
 from ..core.modes import AggregationMode, codec_name
+from ..core.registry import Registry
 
 __all__ = [
     "Codec", "CodecLane", "GradientCodec", "MaskGate", "available_codecs",
@@ -250,6 +251,35 @@ class GradientCodec:
         """Wire payload bytes for ``n_elements`` under this codec."""
         return n_elements * self.bits_per_element / 8.0
 
+    # -- KV-cache capability (serving) -----------------------------------
+    #: the codec can represent KV-cache blocks (not just gradients).
+    #: Sign-vote codecs stay False — a {-1, 0, +1} alphabet cannot carry
+    #: key/value activations; mean-family codecs (FP32 bypass,
+    #: quantizers) opt in and the serving engine routes every cache
+    #: block through ``kv_encode``/``kv_decode``.
+    kv_cache: bool = False
+
+    def kv_encode(self, block: Any) -> Any:
+        """Stored representation of one host-side KV-cache block.
+
+        Mirrors :meth:`encode`'s functional convention: lossy codecs
+        return the dequantized values their wire codes decode to (the
+        int4 block carries 4-bit codes plus a scale on the wire; the
+        functional path stores the values those codes reproduce), so
+        byte accounting uses :meth:`kv_bytes` while the compute path
+        sees exactly what a bit-true decoder would.  Blocks are host
+        ``numpy`` arrays — encoding happens off the jitted step.
+        """
+        return block
+
+    def kv_decode(self, block: Any) -> Any:
+        """Inverse of :meth:`kv_encode` (identity for functional codecs)."""
+        return block
+
+    def kv_bytes(self, n_elements: int) -> float:
+        """Resident/transferred bytes for ``n_elements`` KV-cache values."""
+        return self.payload_bytes(n_elements)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"{type(self).__name__}(name={self.name!r}, "
                 f"bits={self.bits_per_element:.3g}, {self.reduction})")
@@ -259,7 +289,21 @@ class GradientCodec:
 # registry
 # ---------------------------------------------------------------------------
 
-_REGISTRY: dict[str, Codec] = {}
+def _prepare_codec(obj: Any, keys) -> Codec:
+    codec = obj() if isinstance(obj, type) else obj
+    if not isinstance(codec, Codec):
+        raise TypeError(
+            f"codec {keys[0]!r} must define 'name' and "
+            f"'bits_per_element' (subclass GradientCodec)")
+    return codec
+
+
+#: the shared :class:`repro.core.registry.Registry` instance — the same
+#: generic helper backs schedules, controllers, sim topologies, and the
+#: serve scheduler policies, so the override/unregister alias sweep is
+#: implemented exactly once.
+_REGISTRY = Registry("codec", key_fn=codec_name, prepare=_prepare_codec,
+                     register_hint="@register_codec({key!r})")
 
 
 def register_codec(name: Any, *aliases: Any, override: bool = False):
@@ -272,59 +316,22 @@ def register_codec(name: Any, *aliases: Any, override: bool = False):
     other aliases still bound to the replaced instances (a plan naming
     a stale alias must never silently resolve the old codec).
     """
-    keys = [codec_name(k) for k in (name, *aliases)]
-
-    def deco(obj):
-        codec = obj() if isinstance(obj, type) else obj
-        if not isinstance(codec, Codec):
-            raise TypeError(
-                f"codec {keys[0]!r} must define 'name' and "
-                f"'bits_per_element' (subclass GradientCodec)")
-        if not override:
-            # validate every key before inserting any, so a clash on an
-            # alias cannot leave the registry half-registered
-            for key in keys:
-                if key in _REGISTRY:
-                    raise ValueError(
-                        f"codec {key!r} already registered "
-                        f"({type(_REGISTRY[key]).__name__}); pass "
-                        f"override=True to replace it")
-        else:
-            replaced = {id(_REGISTRY[k]): _REGISTRY[k]
-                        for k in keys if k in _REGISTRY}
-            for old in replaced.values():
-                if old is not codec:
-                    for k in [k for k, v in _REGISTRY.items() if v is old]:
-                        del _REGISTRY[k]
-        for key in keys:
-            _REGISTRY[key] = codec
-        return obj
-
-    return deco
+    return _REGISTRY.register(name, *aliases, override=override)
 
 
 def unregister_codec(name: Any) -> None:
     """Remove a codec and every alias bound to the same instance
     (primarily for tests tearing down toy codecs)."""
-    codec = _REGISTRY.pop(codec_name(name), None)
-    if codec is not None:
-        for key in [k for k, v in _REGISTRY.items() if v is codec]:
-            del _REGISTRY[key]
+    _REGISTRY.unregister(name)
 
 
 def get_codec(name: Any) -> Codec:
     """Resolve a codec name (str or AggregationMode enum) to its codec."""
-    key = codec_name(name)
-    try:
-        return _REGISTRY[key]
-    except KeyError:
-        raise KeyError(
-            f"unknown codec {key!r}; available: {available_codecs()}. "
-            f"Register one with @register_codec({key!r}).") from None
+    return _REGISTRY.get(name)
 
 
 def available_codecs() -> tuple[str, ...]:
-    return tuple(sorted(_REGISTRY))
+    return _REGISTRY.available()
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +343,7 @@ class Fp32Codec(GradientCodec):
     """Full-precision mean — warm-up / calibration / recovery bypass."""
     name = "fp32"
     bits_per_element = 32.0
+    kv_cache = True           # serving: full-precision KV blocks
 
 
 @register_codec(AggregationMode.IDENTITY)
@@ -343,6 +351,7 @@ class IdentityCodec(GradientCodec):
     """Original bytes (functional read-back checks only); FP32 accounting."""
     name = "identity"
     bits_per_element = 32.0
+    kv_cache = True           # serving: passthrough KV blocks
 
 
 @register_codec(AggregationMode.G_BINARY)

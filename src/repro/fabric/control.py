@@ -43,6 +43,7 @@ from ..core.admission import (Commander, ControlEvent, CusumGuard, Predictor,
 from ..core.buckets import AdmissionPlan, GroupPolicy
 from ..core.modes import (AggregationMode, Schedule, canonical_mode,
                           codec_name, schedule_name)
+from ..core.registry import Registry
 
 __all__ = [
     "Controller", "ControlEvent", "FP32Controller", "PaperController",
@@ -403,57 +404,39 @@ class Controller(Protocol):
     def observe(self, telemetry: Telemetry) -> AdmissionPlan: ...
 
 
-_CONTROLLERS: dict[str, Callable[..., Any]] = {}
+#: backed by the shared generic :class:`repro.core.registry.Registry`;
+#: unlike schedule backends (stateless, registered as instances),
+#: controllers are *stateful*, so the registry holds factories and
+#: :func:`make_controller` constructs a fresh instance per call.  Going
+#: through the shared helper also gives ``override=True`` the alias
+#: sweep the schedule/codec registries got in PR 5 (replacing a name
+#: drops any other alias still bound to the replaced factory).
+_CONTROLLERS = Registry("controller", key_fn=str,
+                        describe=lambda f: f.__name__,
+                        register_hint="@register_controller({key!r})")
 
 
 def register_controller(name: str, *aliases: str, override: bool = False):
     """Class/factory decorator registering a controller under ``name``.
 
-    Unlike schedule backends (stateless, registered as instances),
-    controllers are *stateful*: the registry holds factories and
-    :func:`make_controller` constructs a fresh instance per call.
     ``aliases`` register the same factory under extra names;
-    re-registering an existing name raises unless ``override=True``.
+    re-registering an existing name raises unless ``override=True``,
+    which replaces the named keys *and* sweeps stale aliases of the
+    replaced factory.
     """
-    keys = [str(k) for k in (name, *aliases)]
-
-    def deco(factory):
-        if not override:
-            # validate every key before inserting any, so a clash on an
-            # alias cannot leave the registry half-registered
-            for key in keys:
-                if key in _CONTROLLERS:
-                    raise ValueError(
-                        f"controller {key!r} already registered "
-                        f"({_CONTROLLERS[key].__name__}); pass "
-                        f"override=True to replace it")
-        for key in keys:
-            _CONTROLLERS[key] = factory
-        return factory
-
-    return deco
+    return _CONTROLLERS.register(name, *aliases, override=override)
 
 
 def unregister_controller(name: str) -> None:
     """Remove a controller factory and all its aliases (for tests
     tearing down toys — a leftover alias would make the original
     ``@register_controller(name, *aliases)`` unrepeatable)."""
-    factory = _CONTROLLERS.pop(str(name), None)
-    if factory is not None:
-        for alias in [k for k, v in _CONTROLLERS.items() if v is factory]:
-            del _CONTROLLERS[alias]
+    _CONTROLLERS.unregister(name)
 
 
 def get_controller(name: str) -> Callable[..., Any]:
     """Resolve a controller name to its registered factory."""
-    key = str(name)
-    try:
-        return _CONTROLLERS[key]
-    except KeyError:
-        raise KeyError(
-            f"unknown controller {key!r}; available: "
-            f"{available_controllers()}. Register one with "
-            f"@register_controller({key!r}).") from None
+    return _CONTROLLERS.get(name)
 
 
 def make_controller(name: str, **kwargs) -> Any:
@@ -462,7 +445,7 @@ def make_controller(name: str, **kwargs) -> Any:
 
 
 def available_controllers() -> tuple[str, ...]:
-    return tuple(sorted(_CONTROLLERS))
+    return _CONTROLLERS.available()
 
 
 # ---------------------------------------------------------------------------

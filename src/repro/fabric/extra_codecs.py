@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .codecs import CodecLane, GradientCodec, register_codec
 
@@ -47,6 +48,7 @@ class Int4Codec(GradientCodec):
     bits_per_element = 4.0
     lane = CodecLane("int4_dense")
     default_schedule = "psum"
+    kv_cache = True
 
     #: symmetric int4 code range: {-7, ..., +7}
     levels = 7.0
@@ -57,6 +59,23 @@ class Int4Codec(GradientCodec):
         safe = jnp.where(scale > 0, scale, 1.0)
         q = jnp.clip(jnp.round(f / safe), -self.levels, self.levels)
         return (q * safe).astype(g.dtype)
+
+    def kv_encode(self, block):
+        """Per-block absmax int4 quantization of a host KV-cache block.
+
+        Same functional convention as :meth:`encode`: the stored array
+        holds the dequantized values the 4-bit codes decode to (wire
+        bytes are priced by ``kv_bytes`` at 4 bits/value + one scale per
+        block), and the operation is idempotent — re-encoding a block
+        already on the int4 grid reproduces it bit-for-bit, so repeated
+        gather/spill round trips do not compound error.
+        """
+        f = np.asarray(block, np.float32)
+        scale = float(np.max(np.abs(f))) / self.levels
+        if scale <= 0.0:
+            return np.asarray(block).copy()
+        q = np.clip(np.round(f / scale), -self.levels, self.levels)
+        return (q * scale).astype(np.asarray(block).dtype)
 
 
 @register_codec("topk")

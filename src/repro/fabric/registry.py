@@ -29,6 +29,7 @@ import dataclasses
 from typing import Any, Protocol, Sequence, runtime_checkable
 
 from ..core.modes import schedule_name
+from ..core.registry import Registry
 
 Axes = Sequence[str] | str
 
@@ -91,7 +92,16 @@ class ScheduleBackend(Protocol):
                   ef: Any | None = None) -> tuple[Any, Any | None]: ...
 
 
-_REGISTRY: dict[str, ScheduleBackend] = {}
+def _prepare_schedule(obj: Any, keys) -> ScheduleBackend:
+    return obj() if isinstance(obj, type) else obj
+
+
+#: backed by the shared generic :class:`repro.core.registry.Registry`
+#: (one implementation of keys / duplicate check / override alias sweep
+#: for every extension seam).
+_REGISTRY = Registry("schedule backend", key_fn=schedule_name,
+                     prepare=_prepare_schedule,
+                     register_hint="@register_schedule({key!r})")
 
 
 def register_schedule(name: Any, *aliases: Any, override: bool = False):
@@ -104,53 +114,19 @@ def register_schedule(name: Any, *aliases: Any, override: bool = False):
     bound to the replaced instances (a plan naming a stale alias must
     never silently resolve the old backend).
     """
-    keys = [schedule_name(k) for k in (name, *aliases)]
-
-    def deco(obj):
-        backend = obj() if isinstance(obj, type) else obj
-        if not override:
-            # validate every key before inserting any, so a clash on an
-            # alias cannot leave the registry half-registered
-            for key in keys:
-                if key in _REGISTRY:
-                    raise ValueError(
-                        f"schedule backend {key!r} already registered "
-                        f"({type(_REGISTRY[key]).__name__}); pass "
-                        f"override=True to replace it")
-        else:
-            replaced = {id(_REGISTRY[k]): _REGISTRY[k]
-                        for k in keys if k in _REGISTRY}
-            for old in replaced.values():
-                if old is not backend:
-                    for k in [k for k, v in _REGISTRY.items() if v is old]:
-                        del _REGISTRY[k]
-        for key in keys:
-            _REGISTRY[key] = backend
-        return obj
-
-    return deco
+    return _REGISTRY.register(name, *aliases, override=override)
 
 
 def unregister_schedule(name: Any) -> None:
     """Remove a backend and every alias bound to the same instance
     (primarily for tests tearing down toy schedules)."""
-    backend = _REGISTRY.pop(schedule_name(name), None)
-    if backend is not None:
-        for key in [k for k, v in _REGISTRY.items() if v is backend]:
-            del _REGISTRY[key]
+    _REGISTRY.unregister(name)
 
 
 def get_schedule(name: Any) -> ScheduleBackend:
     """Resolve a schedule name (str or Schedule enum) to its backend."""
-    key = schedule_name(name)
-    try:
-        return _REGISTRY[key]
-    except KeyError:
-        raise KeyError(
-            f"unknown schedule backend {key!r}; available: "
-            f"{available_schedules()}. Register one with "
-            f"@register_schedule({key!r}).") from None
+    return _REGISTRY.get(name)
 
 
 def available_schedules() -> tuple[str, ...]:
-    return tuple(sorted(_REGISTRY))
+    return _REGISTRY.available()

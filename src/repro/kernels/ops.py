@@ -57,7 +57,7 @@ def pack_signs(plane: jax.Array, *, interpret: bool | None = None) -> jax.Array:
 
 
 def popcount_stack(packed: jax.Array, *, interpret: bool | None = None) -> jax.Array:
-    """(W, R, LANE) packed sign words -> (32 R, LANE) int8 vote counts."""
+    """(W, R, LANE) packed sign words -> (32 R, LANE) int32 vote counts."""
     m = _mode(interpret)
     if m == "ref":
         return ref.popcount_stack(packed)

@@ -13,8 +13,9 @@ The zero gate is an explicit packed operand so the same kernel serves
 G-Binary (gate = all ones; zeros only on vote ties) and G-Ternary
 (gate = the fixed 2-of-3 pattern from Section 2, or any policy mask).
 
-TPU mapping notes: counts are int8 (W <= 127 workers per group, far above
-the DP degree of the production mesh); all tiles are (8k, 128) VREG-aligned;
+TPU mapping notes: counts are int32, so any worker-group width W fits
+(the int8 accumulator the datapath originally used capped groups at
+W <= 127 and silently wrapped beyond); all tiles are (8k, 128) VREG-aligned;
 the word <-> value fan-out of 32 is expressed as a sublane reduction /
 broadcast so no Mosaic-unfriendly reshape crosses the lane dim.
 """
@@ -43,13 +44,13 @@ def _popcount_stack_kernel(packed_ref, out_ref, *, num_workers: int,
             word = packed_ref[w, r:r + 1, :]                     # (1, LANE)
             bits = (jnp.broadcast_to(word, (PACK, LANE)) >> shifts) & jnp.uint32(1)
             acc = acc + bits.astype(jnp.int32)
-        out_ref[r * PACK:(r + 1) * PACK, :] = acc.astype(jnp.int8)
+        out_ref[r * PACK:(r + 1) * PACK, :] = acc
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_words"))
 def popcount_stack(packed: jax.Array, *, interpret: bool = False,
                    block_words: int | None = None) -> jax.Array:
-    """(W, R, LANE) uint32 packed sign words -> (32 R, LANE) int8 vote counts."""
+    """(W, R, LANE) uint32 packed sign words -> (32 R, LANE) int32 vote counts."""
     w, r, lane = packed.shape
     assert lane == LANE
     wb = block_words or _pick_word_block(r, max_words=8)
@@ -57,7 +58,7 @@ def popcount_stack(packed: jax.Array, *, interpret: bool = False,
     return pl.pallas_call(
         functools.partial(_popcount_stack_kernel, num_workers=w,
                           words_per_block=wb),
-        out_shape=jax.ShapeDtypeStruct((r * PACK, LANE), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((r * PACK, LANE), jnp.int32),
         grid=grid,
         in_specs=[pl.BlockSpec((w, wb, LANE), lambda i: (0, i, 0))],
         out_specs=pl.BlockSpec((wb * PACK, LANE), lambda i: (i, 0)),

@@ -87,14 +87,14 @@ def unpack_bits(words: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def popcount_stack(packed: jax.Array) -> jax.Array:
-    """(W, R, LANE) packed sign words -> per-element vote counts (32R, LANE) int8.
+    """(W, R, LANE) packed sign words -> per-element vote counts (32R, LANE) int32.
 
     counts[i] = c_i = PopCount over the W workers' sign bits.
     """
     w, r, lane = packed.shape
     bits = (packed[:, :, None, :] >> _shifts32().reshape(1, 1, PACK, 1)) & jnp.uint32(1)
     counts = jnp.sum(bits.astype(jnp.int32), axis=0)          # (R, 32, LANE)
-    return counts.reshape(r * PACK, lane).astype(jnp.int8)
+    return counts.reshape(r * PACK, lane)
 
 
 # ---------------------------------------------------------------------------

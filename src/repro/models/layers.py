@@ -295,24 +295,43 @@ def attn_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache_k, cache_v,
                 position, *, is_global=True):
     """One-token decode against a KV cache.
 
-    x: (B, 1, d); cache_k/v: (B, S_max, K, hd); position: scalar int32.
+    x: (B, 1, d); cache_k/v: (B, S_max, K, hd); position: scalar int32,
+    or (B,) int32 for continuous batching — per-row write positions and
+    per-row causal masks, so requests at different depths share one step.
     Returns (out (B,1,d), new_cache_k, new_cache_v).
     """
     b = x.shape[0]
-    pos = jnp.full((b, 1), position, jnp.int32)
-    q, k_new, v_new = _qkv(p, x, cfg, pos)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k_new.astype(cache_k.dtype), (0, position, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v_new.astype(cache_v.dtype), (0, position, 0, 0))
-    scores = _gqa_scores(q, cache_k, cfg)               # (B,K,G,1,T)
     t = cache_k.shape[1]
     jidx = jnp.arange(t)
-    valid = jidx <= position
-    if cfg.sliding_window is not None:
-        local = valid & (position - jidx < cfg.sliding_window)
-        valid = jnp.where(jnp.asarray(is_global), valid, local)
-    scores = jnp.where(valid[None, None, None, None], scores, -1e30)
+    if jnp.ndim(position) == 0:
+        # scalar path: all rows at the same depth (training-style decode)
+        pos = jnp.full((b, 1), position, jnp.int32)
+        q, k_new, v_new = _qkv(p, x, cfg, pos)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, position, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, position, 0, 0))
+        valid = jidx <= position
+        if cfg.sliding_window is not None:
+            local = valid & (position - jidx < cfg.sliding_window)
+            valid = jnp.where(jnp.asarray(is_global), valid, local)
+        mask = valid[None, None, None, None]            # (1,1,1,1,T)
+    else:
+        # vector path: row i writes/reads at its own position[i]
+        pos = jnp.asarray(position, jnp.int32).reshape(b, 1)
+        q, k_new, v_new = _qkv(p, x, cfg, pos)
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, pos[:, 0]].set(
+            k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos[:, 0]].set(
+            v_new[:, 0].astype(cache_v.dtype))
+        valid = jidx[None, :] <= pos                    # (B,T)
+        if cfg.sliding_window is not None:
+            local = valid & (pos - jidx[None, :] < cfg.sliding_window)
+            valid = jnp.where(jnp.asarray(is_global), valid, local)
+        mask = valid[:, None, None, None, :]            # (B,1,1,1,T)
+    scores = _gqa_scores(q, cache_k, cfg)               # (B,K,G,1,T)
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, cache_v, cfg)
     out = shard(out, None, None, "model")

@@ -493,7 +493,8 @@ def cache_pspecs(cfg: ModelConfig, *, shard_seq: bool = False,
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 cache: dict, position) -> tuple[jax.Array, dict]:
-    """One-token decode.  token: (B, 1) int32; position: scalar int32."""
+    """One-token decode.  token: (B, 1) int32; position: scalar int32 or
+    (B,) int32 for continuous batching (per-row depths, see attn_decode)."""
     x = jnp.take(params["embed"]["tok"], token, axis=0)
 
     if cfg.family == "ssm":

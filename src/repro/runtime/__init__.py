@@ -3,10 +3,12 @@ from .fault import (FailureInjector, SimulatedFailure, StragglerWatchdog,
                     StepTimer)
 from .train import (Trainer, TrainerConfig, TrainState, build_train_step,
                     dp_num_workers)
-from .serve import build_prefill, build_serve_step, serve_shardings
+from .serve import (build_cached_prefill, build_prefill, build_serve_step,
+                    serve_shardings)
 
 __all__ = [
     "FailureInjector", "SimulatedFailure", "StragglerWatchdog", "StepTimer",
     "Trainer", "TrainerConfig", "TrainState", "build_train_step",
-    "dp_num_workers", "build_prefill", "build_serve_step", "serve_shardings",
+    "dp_num_workers", "build_cached_prefill", "build_prefill",
+    "build_serve_step", "serve_shardings",
 ]

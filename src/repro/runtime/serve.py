@@ -44,17 +44,27 @@ def serve_shardings(cfg: ModelConfig, mesh, *, batch: int, max_seq: int,
     }
 
 
-def build_serve_step(cfg: ModelConfig, mesh, *, batch: int, max_seq: int,
-                     dp_axes=("data",), donate: bool = True):
-    """jitted (params, token, cache, position) -> (logits, cache)."""
+def build_serve_step(cfg: ModelConfig, mesh=None, *, batch: int,
+                     max_seq: int, dp_axes=("data",), donate: bool = True):
+    """jitted (params, token, cache, position) -> (logits, cache).
+
+    ``position`` may be scalar or (B,) int32 (continuous batching — see
+    :func:`repro.models.decode_step`).  ``mesh=None`` builds the same
+    step single-host/unsharded (the serving-engine and unit-test path).
+    """
+    def step(params, token, cache, position):
+        return decode_step(params, cfg, token, cache, position)
+
+    if mesh is None:
+        sh = {"token": None, "cache": None, "params": None,
+              "shard_seq": False}
+        return jax.jit(step, donate_argnums=(2,) if donate else ()), sh
+
     sh = serve_shardings(cfg, mesh, batch=batch, max_seq=max_seq,
                          dp_axes=dp_axes)
     params_like = jax.eval_shape(
         lambda: init_params(jax.random.PRNGKey(0), cfg))
     p_sh = named_shardings(param_pspecs(cfg), mesh, params_like)
-
-    def step(params, token, cache, position):
-        return decode_step(params, cfg, token, cache, position)
 
     sh["params"] = p_sh
     jitted = jax.jit(
@@ -63,6 +73,41 @@ def build_serve_step(cfg: ModelConfig, mesh, *, batch: int, max_seq: int,
         out_shardings=(None, sh["cache"]),
         donate_argnums=(2,) if donate else ())
     return jitted, sh
+
+
+def build_cached_prefill(cfg: ModelConfig, mesh=None, *,
+                         dp_axes=("data",), donate: bool = True):
+    """jitted (params, tokens, length, cache) -> (last_logits, cache).
+
+    Cache-filling prefill: feeds ``tokens[:, :length]`` through
+    :func:`decode_step` with a ``fori_loop`` over a *traced* length, so
+    one compile covers every prompt length up to the padded width.
+    ``tokens`` is (B, P) int32 (pad past ``length`` arbitrarily);
+    returns the logits at the last prompt position plus the cache filled
+    at positions ``[0, length)`` — ready for decode at ``length``.
+    """
+    def run(params, tokens, length, cache):
+        tok0 = jax.lax.dynamic_slice_in_dim(tokens, 0, 1, axis=1)
+        logits, cache = decode_step(params, cfg, tok0, cache,
+                                    jnp.int32(0))
+
+        def body(i, carry):
+            _, c = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            return decode_step(params, cfg, tok, c, i)
+
+        return jax.lax.fori_loop(1, length, body, (logits, cache))
+
+    if mesh is None:
+        return jax.jit(run, donate_argnums=(3,) if donate else ())
+
+    params_like = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = named_shardings(param_pspecs(cfg), mesh, params_like)
+    b_sh = NamedSharding(mesh, P(tuple(dp_axes), None))
+    return jax.jit(run, in_shardings=(p_sh, b_sh, None, None),
+                   out_shardings=None,
+                   donate_argnums=(3,) if donate else ())
 
 
 def build_prefill(cfg: ModelConfig, mesh, *, dp_axes=("data",)):

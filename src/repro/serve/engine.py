@@ -1,0 +1,377 @@
+"""ServeEngine: continuous-batching decode over the paged KV cache.
+
+One engine step = (policy-ordered admission + prefill of newly seated
+requests) followed by a single *batched* decode launch in which every
+active request advances one token at its own depth — the vector-position
+path of :func:`repro.models.decode_step`.  Between the logical block
+tables and the dense cache the jitted step consumes, the engine
+gathers/scatters through the KV codec (:mod:`repro.serve.cache`), so
+every step's fabric traffic (gather + scatter + spill/fetch of preempted
+state) is codec-priced and recorded in a :class:`StepRecord`.
+
+Determinism contract (asserted in ``tests/test_serve.py``): with the
+lossless ``fp32`` KV codec, each request's logits are bit-identical to
+running it alone through the same jitted step — continuous batching,
+paging, preemption and CXL spill round-trips are all invisible to the
+numerics.  The per-step records replay through :mod:`repro.sim` via
+:meth:`ServeEngine.simulate`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, init_cache, init_params
+from ..runtime.serve import build_cached_prefill, build_serve_step
+from ..sim.trace import simulate_launches, timeline_launch_specs
+from .blocks import NoFreeBlocks
+from .cache import PagedKVCache
+from .scheduler import Request, RequestState, Scheduler
+
+#: families whose decode state is a sequence-indexed KV cache the block
+#: pager can address; SSM/hybrid state and encoder cross-caches are not
+#: token-paged.
+PAGEABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    """Traffic and scheduling facts of one engine step."""
+    step: int
+    active: tuple               # rids that decoded this step
+    admitted: tuple
+    preempted: tuple
+    finished: tuple
+    new_tokens: int             # tokens sampled (prefill + decode)
+    n_elements: int             # KV elements gathered + scattered
+    wire_bytes: float           # codec-priced gather+scatter+spill+fetch
+    blocks_in_use: int
+    utilization: float          # of the block pool, after this step
+
+    def to_jsonable(self) -> dict:
+        d = dataclasses.asdict(self)
+        for key in ("active", "admitted", "preempted", "finished"):
+            d[key] = list(d[key])
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeTimeline:
+    """The engine's step history, replayable through ``repro.sim``."""
+    steps: tuple                # tuple[StepRecord]
+    kv_codec: str
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def total_new_tokens(self) -> int:
+        return sum(s.new_tokens for s in self.steps)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(s.wire_bytes for s in self.steps)
+
+    @property
+    def total_preemptions(self) -> int:
+        return sum(len(s.preempted) for s in self.steps)
+
+    def launch_specs(self, *, step_compute_s: float = 0.0,
+                     schedule: str = "paged_kv"):
+        """One fabric launch per step (KV movement of that step)."""
+        return timeline_launch_specs(
+            [{"name": f"decode:{s.step}", "n_elements": s.n_elements,
+              "wire_bytes": s.wire_bytes, "ready_s": s.step * step_compute_s}
+             for s in self.steps],
+            mode=self.kv_codec, schedule=schedule)
+
+    def to_jsonable(self) -> dict:
+        return {"kv_codec": self.kv_codec,
+                "num_steps": self.num_steps,
+                "total_new_tokens": self.total_new_tokens,
+                "total_wire_bytes": self.total_wire_bytes,
+                "total_preemptions": self.total_preemptions,
+                "steps": [s.to_jsonable() for s in self.steps]}
+
+
+class ServeEngine:
+    """Continuous-batching serving engine over a paged, codec-priced
+    KV cache.
+
+    ``max_batch`` fixes the decode width (one compile); requests are
+    seated into its slots as they arrive and leave as they finish, so
+    the batch composition changes every step.  ``num_blocks`` x
+    ``block_size`` bounds resident KV; running out triggers LRU spill of
+    preempted (cold) state to the modeled CXL tier, then preemption.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, max_batch: int = 4,
+                 max_seq: int = 128, num_blocks: int = 64,
+                 block_size: int = 16, kv_codec: str = "fp32",
+                 policy: Any = "fcfs", cache_dtype=np.float32,
+                 seed: int = 0, collect_logits: bool = False):
+        if cfg.family not in PAGEABLE_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} is not servable with a paged KV "
+                f"cache (supported: {', '.join(PAGEABLE_FAMILIES)}); "
+                f"SSM/hybrid recurrent state and encoder cross-caches are "
+                f"not token-paged")
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(
+            jax.random.PRNGKey(seed), cfg)
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        self.cache_dtype = np.dtype(cache_dtype)
+        self.cache = PagedKVCache(cfg, num_blocks=num_blocks,
+                                  block_size=block_size, kv_codec=kv_codec,
+                                  dtype=self.cache_dtype)
+        self.scheduler = Scheduler(max_batch=max_batch, policy=policy)
+        self._prefill = build_cached_prefill(cfg, donate=False)
+        self._step, _ = build_serve_step(cfg, batch=self.max_batch,
+                                         max_seq=self.max_seq, donate=False)
+        self.requests: dict[int, Request] = {}
+        self.records: list[StepRecord] = []
+        self.step_index = 0
+        self.collect_logits = collect_logits
+        self.logits: dict[int, list] = {}
+        self._next_rid = 0
+        self._tick = 0
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival_step: int = 0) -> int:
+        """Queue a request; returns its rid."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + int(max_new_tokens) > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + budget ({max_new_tokens}) "
+                f"exceeds max_seq={self.max_seq}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(max_new_tokens),
+                      arrival_step=int(arrival_step))
+        self.requests[rid] = req
+        self.scheduler.add(req)
+        return rid
+
+    # -- one engine step --------------------------------------------------
+
+    def step(self) -> StepRecord:
+        """Admit, prefill, batched-decode one token, scatter, sample."""
+        now = self.step_index
+        admitted: list[int] = []
+        preempted: list[int] = []
+        finished: list[int] = []
+        new_tokens = 0
+        base_elems = (self.cache.gathered_elements
+                      + self.cache.scattered_elements)
+        base_bytes = (self.cache.gathered_bytes + self.cache.scattered_bytes
+                      + self.cache.tier.spilled_bytes
+                      + self.cache.tier.fetched_bytes)
+
+        # 1. admission (+ prefill of never-seen prompts)
+        for req in self.scheduler.admissible(now):
+            if not self._admit(req):
+                break                     # no room this step; keep order
+            admitted.append(req.rid)
+            if not req.prefilled:
+                self._run_prefill(req)
+                new_tokens += 1
+            if req.done:                  # budget met at prefill already
+                self._finish(req)
+                finished.append(req.rid)
+
+        # 2. grow tables for this step's writes; preempt under pressure
+        for req in list(self.scheduler.running):
+            while req.slot is not None:
+                try:
+                    self.cache.ensure_capacity(req.rid,
+                                               req.tokens_in_cache + 1)
+                    break
+                except NoFreeBlocks:
+                    victim = self.scheduler.preempt(exclude=req)
+                    if victim is None:
+                        raise RuntimeError(
+                            "KV pool too small for a single request")
+                    self.cache.deactivate(victim.rid, self._next_tick())
+                    preempted.append(victim.rid)
+
+        # 3. one batched decode launch over every seated request
+        active = sorted(self.scheduler.running, key=lambda r: r.slot)
+        if active:
+            logits = self._decode(active)
+            for i, req in enumerate(active):
+                pos = req.tokens_in_cache
+                req.tokens_in_cache = pos + 1
+                row = np.asarray(logits[req.slot])
+                if self.collect_logits:
+                    self.logits[req.rid].append(row)
+                nxt = int(np.argmax(row))
+                req.outputs.append(nxt)
+                req.pending_token = nxt
+                new_tokens += 1
+                if req.done or req.total_len >= self.max_seq:
+                    self._finish(req)
+                    finished.append(req.rid)
+
+        rec = StepRecord(
+            step=now,
+            active=tuple(r.rid for r in active),
+            admitted=tuple(admitted), preempted=tuple(preempted),
+            finished=tuple(finished), new_tokens=new_tokens,
+            n_elements=(self.cache.gathered_elements
+                        + self.cache.scattered_elements - base_elems),
+            wire_bytes=(self.cache.gathered_bytes
+                        + self.cache.scattered_bytes
+                        + self.cache.tier.spilled_bytes
+                        + self.cache.tier.fetched_bytes - base_bytes),
+            blocks_in_use=self.cache.blocks_in_use,
+            utilization=self.cache.utilization())
+        self.records.append(rec)
+        self.step_index += 1
+        return rec
+
+    # -- driving loops ----------------------------------------------------
+
+    def run(self, max_steps: int = 10_000) -> DecodeTimeline:
+        """Step until every submitted request finishes."""
+        while any(r.state is not RequestState.FINISHED
+                  for r in self.requests.values()):
+            if self.step_index >= max_steps:
+                raise RuntimeError(f"serving did not drain in "
+                                   f"{max_steps} steps")
+            self.step()
+        return self.timeline()
+
+    def serve(self, trace: Sequence[Any],
+              max_steps: int = 10_000) -> dict[int, list[int]]:
+        """Submit a whole request trace, run it dry, return outputs.
+
+        ``trace`` entries are mappings with ``prompt`` /
+        ``max_new_tokens`` / optional ``arrival_step``.
+        """
+        rids = [self.submit(e["prompt"], e["max_new_tokens"],
+                            e.get("arrival_step", 0)) for e in map(dict, trace)]
+        self.run(max_steps=max_steps)
+        return {rid: list(self.requests[rid].outputs) for rid in rids}
+
+    def timeline(self) -> DecodeTimeline:
+        return DecodeTimeline(steps=tuple(self.records),
+                              kv_codec=self.cache.codec.name)
+
+    def simulate(self, timeline: Optional[DecodeTimeline] = None, *,
+                 topology: Any = "cxl_direct", step_compute_s: float = 1e-3,
+                 num_workers: int = 1, **topology_kwargs):
+        """Replay the decode timeline's KV traffic through ``repro.sim``.
+
+        Each engine step becomes one launch carrying that step's
+        codec-priced gather/scatter/spill bytes, ready when the model
+        forward of the step finishes (``step * step_compute_s``); the
+        returned :class:`~repro.sim.SimReport` exposes queueing and
+        exposure of the serving datapath on the chosen topology.
+        """
+        tl = timeline if timeline is not None else self.timeline()
+        specs = tl.launch_specs(step_compute_s=step_compute_s)
+        return simulate_launches(
+            specs, num_workers, topology=topology, datapath=None,
+            compute_time_s=tl.num_steps * step_compute_s, **topology_kwargs)
+
+    # -- internals --------------------------------------------------------
+
+    def _next_tick(self) -> int:
+        self._tick += 1
+        return self._tick
+
+    def _admit(self, req: Request) -> bool:
+        """Seat one waiting request; False when it cannot fit right now.
+
+        Admission never preempts (that privilege belongs to requests
+        already decoding) but it may spill *cold* blocks via the
+        allocator's eviction path.
+        """
+        self.scheduler.admit(req)
+        rid = req.rid
+        if rid not in self.cache:
+            self.cache.add_request(rid)
+            if self.collect_logits:
+                self.logits[rid] = []
+        try:
+            if req.prefilled:
+                if not self.cache.activate(rid, self._next_tick()):
+                    raise NoFreeBlocks(f"cannot resume request {rid}")
+            else:
+                self.cache.ensure_capacity(rid, len(req.prompt))
+        except NoFreeBlocks:
+            self._bounce(req)
+            return False
+        req.state = RequestState.DECODE
+        return True
+
+    def _bounce(self, req: Request) -> None:
+        """Undo a failed admission: back to waiting, blocks cold."""
+        self.scheduler._release_slot(req)
+        req.state = RequestState.WAITING
+        self.scheduler.waiting.append(req)
+        self.cache.deactivate(req.rid, self._next_tick())
+
+    def _run_prefill(self, req: Request) -> None:
+        """Fill the prompt KV pages and sample the first token."""
+        plen = len(req.prompt)
+        tokens = np.zeros((1, self.max_seq), np.int32)
+        tokens[0, :plen] = req.prompt
+        cache0 = init_cache(self.cfg, 1, self.max_seq,
+                            dtype=self.cache_dtype)
+        logits, filled = self._prefill(self.params, jnp.asarray(tokens),
+                                       jnp.int32(plen), cache0)
+        self.cache.write_prompt(
+            req.rid,
+            np.asarray(filled["k"][:, 0, :plen]),
+            np.asarray(filled["v"][:, 0, :plen]))
+        row = np.asarray(logits[0])
+        if self.collect_logits:
+            self.logits[req.rid].append(row)
+        first = int(np.argmax(row))
+        req.outputs.append(first)
+        req.pending_token = first
+        req.tokens_in_cache = plen
+        req.prefilled = True
+
+    def _decode(self, active: Sequence[Request]):
+        """Gather pages -> one vector-position decode -> scatter back."""
+        cfg = self.cfg
+        shape = (cfg.num_layers, self.max_batch, self.max_seq,
+                 cfg.num_kv_heads, cfg.hd)
+        dense_k = np.zeros(shape, self.cache_dtype)
+        dense_v = np.zeros(shape, self.cache_dtype)
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        positions = np.zeros((self.max_batch,), np.int32)
+        for req in active:
+            self.cache.gather_into(req.rid, dense_k[:, req.slot],
+                                   dense_v[:, req.slot])
+            tokens[req.slot, 0] = req.pending_token
+            positions[req.slot] = req.tokens_in_cache
+        logits, new_cache = self._step(
+            self.params, jnp.asarray(tokens),
+            {"k": jnp.asarray(dense_k), "v": jnp.asarray(dense_v)},
+            jnp.asarray(positions))
+        new_k = np.asarray(new_cache["k"])
+        new_v = np.asarray(new_cache["v"])
+        for req in active:
+            pos = req.tokens_in_cache
+            self.cache.write_token(req.rid, pos,
+                                   new_k[:, req.slot, pos],
+                                   new_v[:, req.slot, pos])
+        return logits
+
+    def _finish(self, req: Request) -> None:
+        self.scheduler.finish(req)
+        self.cache.release(req.rid)

@@ -37,7 +37,8 @@ from .topology import (CxlDirect, CxlSwitched, Hop, IciRing, MultiHop,
                        Route, available_topologies, get_topology,
                        register_topology, unregister_topology)
 from .trace import (LaunchRecord, LaunchSpec, SimReport,
-                    layout_launch_specs, simulate_launches, simulate_layout)
+                    layout_launch_specs, simulate_launches, simulate_layout,
+                    timeline_launch_specs)
 
 __all__ = [
     "FLIT_BITS", "PIPELINE_STAGES", "FlitPipeline", "LaneSpec",
@@ -49,5 +50,5 @@ __all__ = [
     "available_topologies", "get_topology", "register_topology",
     "unregister_topology",
     "LaunchRecord", "LaunchSpec", "SimReport", "layout_launch_specs",
-    "simulate_launches", "simulate_layout",
+    "simulate_launches", "simulate_layout", "timeline_launch_specs",
 ]

@@ -26,8 +26,8 @@ Topologies register under a string name with :func:`register_topology`
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
+from ..core.registry import Registry
 from ..core.traffic import IciModel
 
 
@@ -55,30 +55,37 @@ class Route:
 # registry
 # ---------------------------------------------------------------------------
 
-_TOPOLOGIES: dict[str, Callable] = {}
+#: backed by the shared generic :class:`repro.core.registry.Registry`
+#: (same helper as the codec/schedule/controller seams), which brings
+#: this registry the alias + ``override=True`` sweep semantics the
+#: hand-rolled version lacked.  Stores *factories*: :func:`get_topology`
+#: calls the registered object with its kwargs.
+_TOPOLOGIES = Registry("topology", key_fn=str,
+                       describe=lambda f: getattr(f, "__name__",
+                                                  type(f).__name__),
+                       format_available=", ".join)
 
 
-def register_topology(name: str):
+def register_topology(name: str, *aliases: str, override: bool = False):
     """Class/factory decorator: register a topology under ``name``.
 
     The registered object is called with the ``get_topology`` kwargs and
     must return an instance exposing
-    ``route(wire_bytes, num_workers, index) -> Route``.
+    ``route(wire_bytes, num_workers, index) -> Route``.  ``aliases``
+    register the same factory under extra names; re-registering raises
+    unless ``override=True`` (which also sweeps stale aliases of the
+    replaced factory).
     """
-    def deco(factory):
-        if name in _TOPOLOGIES:
-            raise ValueError(f"topology {name!r} is already registered")
-        _TOPOLOGIES[name] = factory
-        return factory
-    return deco
+    return _TOPOLOGIES.register(name, *aliases, override=override)
 
 
 def unregister_topology(name: str) -> None:
-    _TOPOLOGIES.pop(name, None)
+    """Remove a topology factory and all its aliases."""
+    _TOPOLOGIES.unregister(name)
 
 
 def available_topologies() -> tuple[str, ...]:
-    return tuple(sorted(_TOPOLOGIES))
+    return _TOPOLOGIES.available()
 
 
 def get_topology(name_or_topology, **kwargs):
@@ -88,13 +95,7 @@ def get_topology(name_or_topology, **kwargs):
             raise TypeError("factory kwargs are only valid with a "
                             "registered topology name")
         return name_or_topology
-    try:
-        factory = _TOPOLOGIES[name_or_topology]
-    except KeyError:
-        raise KeyError(
-            f"unknown topology {name_or_topology!r}; available: "
-            f"{', '.join(available_topologies())}") from None
-    return factory(**kwargs)
+    return _TOPOLOGIES.get(name_or_topology)(**kwargs)
 
 
 # ---------------------------------------------------------------------------

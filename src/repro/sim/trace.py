@@ -295,6 +295,34 @@ def layout_launch_specs(layout: BucketLayout, num_workers: int, *,
     return specs
 
 
+def timeline_launch_specs(steps: Sequence[Any], *,
+                          step_compute_s: float = 0.0,
+                          mode: Any = "fp32",
+                          schedule: str = "paged_kv") -> list[LaunchSpec]:
+    """Per-step traffic records -> simulatable launch list.
+
+    The serving-side counterpart of :func:`layout_launch_specs`: instead
+    of a backward pass emitting buckets, a decode loop emits one fabric
+    transaction per engine step (KV gather + scatter + spill traffic).
+    Each entry of ``steps`` is a mapping with ``wire_bytes`` plus
+    optional ``name`` / ``mode`` / ``schedule`` / ``n_elements`` /
+    ``ready_s`` overrides; step ``i`` defaults to becoming ready at
+    ``i * step_compute_s`` (the model-forward time separating decode
+    steps).
+    """
+    specs = []
+    for i, entry in enumerate(steps):
+        d = dict(entry)
+        specs.append(LaunchSpec(
+            name=str(d.get("name", f"step:{i}")),
+            mode=d.get("mode", mode),
+            schedule=str(d.get("schedule", schedule)),
+            n_elements=int(d.get("n_elements", 0)),
+            wire_bytes=float(d["wire_bytes"]),
+            ready_s=float(d.get("ready_s", i * step_compute_s))))
+    return specs
+
+
 def simulate_layout(layout: BucketLayout, num_workers: int, *,
                     topology: Any = "ici_ring",
                     datapath: Any | None = None,

@@ -104,6 +104,22 @@ def test_identity_readback_byte_exact(rng):
     np.testing.assert_array_equal(np.asarray(words), np.asarray(roundtrip))
 
 
+@pytest.mark.parametrize("w", [128, 256])
+def test_popcount_counts_survive_wide_worker_groups(rng, w):
+    """Regression: the int8 count accumulator wrapped for W > 127 (256
+    unanimous positive votes counted as 0, flipping the majority)."""
+    plane = jnp.ones((32, 128), jnp.float32)
+    stack = jnp.stack([K.pack_signs(plane, interpret=True)] * w)
+    counts = K.popcount_stack(stack, interpret=True)
+    assert counts.dtype == jnp.int32
+    assert int(np.asarray(counts).min()) == w       # unanimous -> count == W
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(ref.popcount_stack(stack)))
+    sw, mw = K.majority_decode(counts, num_workers=w, interpret=True)
+    u = K.unpack_ternary(sw, mw, interpret=True)
+    assert np.all(np.asarray(u) == 1.0)
+
+
 def test_vote_tie_decodes_to_zero():
     """Even worker count, exact tie -> a = 0 -> u = 0 (paper Section 2)."""
     w = 8

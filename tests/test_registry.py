@@ -1,0 +1,143 @@
+"""The generic Registry helper and its behavior at every extension seam.
+
+PR 5 fixed override/unregister alias sweeping for codecs and schedules
+by hand; unifying the four hand-rolled registries (plus the new serve
+policy seam) onto :class:`repro.core.registry.Registry` delivers that
+fix everywhere.  These tests pin the sweep semantics on the two seams
+that previously lacked it — controllers and topologies — plus the
+generic class itself.
+"""
+import pytest
+
+from repro.core.registry import Registry
+
+
+# ---------------------------------------------------------------------------
+# the generic class
+# ---------------------------------------------------------------------------
+
+def test_registry_duplicate_and_override_sweep():
+    reg = Registry("widget")
+
+    @reg.register("a", "a_alias")
+    class A:
+        pass
+
+    with pytest.raises(ValueError, match="widget 'a' already registered"):
+        reg.register("a")(object())
+
+    # overriding the primary name must drop the stale alias of the
+    # replaced object — 'a_alias' must never resolve the old entry
+    @reg.register("a", override=True)
+    class B:
+        pass
+
+    assert reg.get("a") is B
+    assert "a_alias" not in reg
+    assert reg.available() == ("a",)
+
+
+def test_registry_unregister_sweeps_aliases():
+    reg = Registry("widget")
+    reg.register("x", "y", "z")(object())
+    assert len(reg) == 3
+    reg.unregister("y")                    # any key clears all three
+    assert len(reg) == 0
+    reg.unregister("x")                    # idempotent on absent keys
+
+
+def test_registry_unknown_key_message_with_and_without_hint():
+    plain = Registry("thing")
+    with pytest.raises(KeyError, match=r"unknown thing 'nope'; available:"):
+        plain.get("nope")
+    hinted = Registry("thing", register_hint="@register_thing({key!r})")
+    with pytest.raises(KeyError,
+                       match=r"Register one with @register_thing\('nope'\)"):
+        hinted.get("nope")
+
+
+def test_registry_half_registration_never_happens():
+    reg = Registry("widget")
+    reg.register("taken")(object())
+    with pytest.raises(ValueError):
+        reg.register("fresh", "taken")(object())   # alias clashes
+    assert "fresh" not in reg                      # nothing inserted
+
+
+# ---------------------------------------------------------------------------
+# the sweep fix reaching the controller seam
+# ---------------------------------------------------------------------------
+
+def test_controller_override_sweeps_stale_aliases():
+    from repro.fabric.control import (available_controllers, get_controller,
+                                      register_controller,
+                                      unregister_controller)
+
+    @register_controller("swp_main", "swp_alias")
+    def first(**kw):
+        return "first"
+
+    try:
+        @register_controller("swp_main", override=True)
+        def second(**kw):
+            return "second"
+
+        assert get_controller("swp_main") is second
+        assert "swp_alias" not in available_controllers()
+        with pytest.raises(KeyError, match="unknown controller 'swp_alias'"):
+            get_controller("swp_alias")
+    finally:
+        unregister_controller("swp_main")
+    assert "swp_main" not in available_controllers()
+
+
+# ---------------------------------------------------------------------------
+# ... and the topology seam (which also gains aliases)
+# ---------------------------------------------------------------------------
+
+def test_topology_aliases_and_override_sweep():
+    from repro.sim import (available_topologies, get_topology,
+                           register_topology, unregister_topology)
+
+    class Direct:
+        name = "swp_topo"
+
+        def route(self, wire_bytes, num_workers, index=0):
+            from repro.sim import Route
+            return Route(hops=(), latency_s=1e-6)
+
+    register_topology("swp_topo", "swp_topo_alias")(lambda **kw: Direct())
+    try:
+        assert "swp_topo_alias" in available_topologies()
+        assert get_topology("swp_topo_alias").name == "swp_topo"
+
+        register_topology("swp_topo", override=True)(lambda **kw: Direct())
+        assert "swp_topo_alias" not in available_topologies()
+        with pytest.raises(KeyError, match="unknown topology 'swp_topo_alias'"):
+            get_topology("swp_topo_alias")
+    finally:
+        unregister_topology("swp_topo")
+    assert "swp_topo" not in available_topologies()
+
+
+def test_serve_policy_rides_the_same_seam():
+    from repro.serve import (available_policies, get_policy,
+                             register_policy, unregister_policy)
+
+    @register_policy("swp_pol", "swp_pol_alias")
+    class Pol:
+        name = "swp_pol"
+
+        def admission_order(self, waiting):
+            return list(waiting)
+
+        def preemption_victim(self, running):
+            return running[-1]
+
+    try:
+        assert get_policy("swp_pol_alias") is get_policy("swp_pol")
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy("swp_pol")(Pol)
+    finally:
+        unregister_policy("swp_pol")
+    assert "swp_pol_alias" not in available_policies()
