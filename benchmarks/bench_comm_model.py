@@ -23,13 +23,22 @@ import jax
 from repro.core.buckets import (AdmissionPlan, DEFAULT_BUCKET_BYTES,
                                 group_sizes, plan_buckets, resolve_policies)
 from repro.core.modes import AggregationMode, Schedule
-from repro.core.traffic import (GPT2_XL_PARAMS, IciModel, modeled_comm_time,
-                                modeled_layout_comm_time, plan_traffic_ratio,
-                                wire_bytes_per_device)
+from repro.core.traffic import (GPT2_XL_PARAMS, IciModel,
+                                hop_wire_bytes_per_device,
+                                modeled_comm_time, modeled_layout_comm_time,
+                                modeled_layout_multihop_time,
+                                plan_traffic_ratio, wire_bytes_per_device)
 from repro.fabric import available_codecs, get_codec, get_schedule
 
 #: where the machine-readable per-codec summary lands (cwd of the run)
 BENCH_CODECS_JSON = os.environ.get("BENCH_CODECS_JSON", "BENCH_codecs.json")
+#: where the hierarchical (per-hop) accounting lands; bench_sim merges
+#: its multihop exposure figures into the same file
+BENCH_HIERARCHICAL_JSON = os.environ.get("BENCH_HIERARCHICAL_JSON",
+                                         "BENCH_hierarchical.json")
+
+#: the built-in hop plans benchmarked on the GPT-2 XL census
+HIER_PLANS = ("hier_fp32_gbinary", "hier_fp32_gternary", "hier_fp32_int4")
 
 W = 32
 PATHS = [
@@ -115,6 +124,54 @@ def _codec_rows(ici):
     return out
 
 
+def _hierarchical_rows():
+    """Per-hop byte accounting for the built-in hop plans.
+
+    For every registered hierarchical route, the GPT-2 XL payload's
+    per-leg wire bytes at W=32 (8-wide intra-node FP32, 4-wide
+    inter-node low-bit), each leg as a ratio of the flat FP32 ring, and
+    the scarce *inter-node* leg against the same codec run flat at full
+    width — the paper-style win a single-codec plan cannot express.
+    The summary seeds ``BENCH_hierarchical.json``; ``bench_sim`` merges
+    its multihop exposure figures into the same file.
+    """
+    n = GPT2_XL_PARAMS
+    fp32_total = wire_bytes_per_device(n, AggregationMode.FP32, "psum", W)
+    params = _gpt2_xl_leaves()
+    out, bench = [], {}
+    for name in HIER_PLANS:
+        codec = get_codec(name)
+        backbone = codec.plan.hops[-1].codec
+        legs = hop_wire_bytes_per_device(n, name, "hierarchical", W)
+        flat_backbone = wire_bytes_per_device(
+            n, backbone, get_codec(backbone).default_schedule, W)
+        layout = plan_buckets(params,
+                              resolve_policies(
+                                  params, AdmissionPlan.lowbit_backbone(name)),
+                              bucket_bytes=DEFAULT_BUCKET_BYTES)
+        t_multihop = modeled_layout_multihop_time(layout, W)
+        bench[name] = {
+            "hop_signature": codec.hop_signature,
+            "per_hop_bytes": list(legs),
+            "per_hop_bytes_ratio_vs_fp32": [b / fp32_total for b in legs],
+            "inter_node_bytes": legs[-1],
+            "inter_node_ratio_vs_fp32": legs[-1] / fp32_total,
+            "flat_backbone_bytes": flat_backbone,
+            "inter_node_vs_flat_backbone": legs[-1] / flat_backbone,
+            "modeled_layout_multihop_time_s": t_multihop,
+        }
+        out.append((f"comm_model/hier/{name}", t_multihop * 1e6,
+                    f"legs={'+'.join(f'{b/2**30:.3f}GiB' for b in legs)} "
+                    f"inter_node_vs_fp32={legs[-1]/fp32_total:.4f} "
+                    f"inter_node_vs_flat_{backbone}="
+                    f"{legs[-1]/flat_backbone:.4f}"))
+    with open(BENCH_HIERARCHICAL_JSON, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    out.append(("comm_model/hier/bench_json", 0.0,
+                f"wrote {BENCH_HIERARCHICAL_JSON} ({len(bench)} plans)"))
+    return out
+
+
 def rows():
     out = []
     ici = IciModel()
@@ -134,4 +191,5 @@ def rows():
                     f"wire={b/2**30:.2f}GiB speedup={base/t:.1f}x"))
     out.extend(_fused_rows(ici))
     out.extend(_codec_rows(ici))
+    out.extend(_hierarchical_rows())
     return out

@@ -15,7 +15,8 @@ from repro.core.modes import AggregationMode, Schedule
 from repro.sim import (available_topologies, paper_operating_points,
                        simulate_layout)
 
-from benchmarks.bench_comm_model import W, _gpt2_xl_leaves
+from benchmarks.bench_comm_model import (BENCH_HIERARCHICAL_JSON, HIER_PLANS,
+                                         W, _gpt2_xl_leaves)
 
 #: where the machine-readable scenario summary lands (cwd of the run)
 BENCH_SIM_JSON = os.environ.get("BENCH_SIM_JSON", "BENCH_sim.json")
@@ -34,6 +35,13 @@ def _gpt2_xl_layout():
     return plan_buckets(params, policies, bucket_bytes=DEFAULT_BUCKET_BYTES)
 
 
+def _hier_layout(plan_name):
+    params = _gpt2_xl_leaves()
+    plan = AdmissionPlan.lowbit_backbone(plan_name)
+    policies = resolve_policies(params, plan)
+    return plan_buckets(params, policies, bucket_bytes=DEFAULT_BUCKET_BYTES)
+
+
 def scenario_reports():
     """name -> SimReport for every benchmark scenario."""
     reports = dict(paper_operating_points())
@@ -41,7 +49,27 @@ def scenario_reports():
     for topo in available_topologies():
         reports[f"gpt2xl_fused/{topo}"] = simulate_layout(
             layout, W, topology=topo, compute_time_s=GPT2_XL_COMPUTE_S)
+    # hierarchical routes replayed leg-by-leg on the multihop topology
+    for plan_name in HIER_PLANS:
+        reports[f"gpt2xl_hier/{plan_name}/multihop"] = simulate_layout(
+            _hier_layout(plan_name), W, topology="multihop",
+            compute_time_s=GPT2_XL_COMPUTE_S)
     return reports
+
+
+def _merge_hier_exposure(bench):
+    """Fold the multihop exposure figures of the hierarchical scenarios
+    into ``BENCH_hierarchical.json`` (seeded by bench_comm_model)."""
+    hier = {}
+    if os.path.exists(BENCH_HIERARCHICAL_JSON):
+        with open(BENCH_HIERARCHICAL_JSON) as f:
+            hier = json.load(f)
+    for plan_name in HIER_PLANS:
+        summary = bench.get(f"gpt2xl_hier/{plan_name}/multihop")
+        if summary is not None:
+            hier.setdefault(plan_name, {})["multihop_sim"] = summary
+    with open(BENCH_HIERARCHICAL_JSON, "w") as f:
+        json.dump(hier, f, indent=1, sort_keys=True)
 
 
 def rows():
@@ -56,4 +84,7 @@ def rows():
         json.dump(bench, f, indent=1, sort_keys=True)
     out.append(("sim/bench_json", 0.0,
                 f"wrote {BENCH_SIM_JSON} ({len(bench)} scenarios)"))
+    _merge_hier_exposure(bench)
+    out.append(("sim/hier_bench_json", 0.0,
+                f"merged multihop exposure into {BENCH_HIERARCHICAL_JSON}"))
     return out

@@ -13,9 +13,7 @@ injected mid-run; the Supervisor's CUSUM guard recovers to FP32; and
 after cooldown the mode is re-admitted.  Each step the pilot feeds the
 controller one typed :class:`~repro.fabric.control.Telemetry` record and
 reads back the latched plan — the same ``observe`` path the production
-Trainer drives (the pre-registry ``ControlPlane.step(loss, cosines=...)``
-API remains available as a deprecation shim in ``repro.core.admission``).
-The trace prints every mode transition.
+Trainer drives.  The trace prints every mode transition.
 
 Run:  PYTHONPATH=src python examples/guarded_recovery.py
 """

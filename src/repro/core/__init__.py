@@ -23,13 +23,13 @@ from .buckets import (AdmissionPlan, Bucket, BucketGate, BucketKey,
                       group_sizes, path_name, plan_buckets,
                       resolve_policies)
 from .aggregate import aggregate_gradients, init_ef_states, make_policy_tree
-from .admission import (Commander, ControlPlane, CusumGuard, Predictor,
-                        Supervisor)
+from .admission import Commander, CusumGuard, Predictor, Supervisor
 from .diagnostics import (cosines_to_host, group_cosines_from_mean,
                           group_cosines_from_workers)
-from .traffic import (IciModel, modeled_comm_time, modeled_layout_comm_time,
-                      payload_bytes, plan_traffic_ratio,
-                      wire_bytes_per_device)
+from .traffic import (IciModel, MultiHopModel, hop_wire_bytes_per_device,
+                      modeled_comm_time, modeled_layout_comm_time,
+                      modeled_layout_multihop_time, payload_bytes,
+                      plan_traffic_ratio, wire_bytes_per_device)
 from .exposure import ExposureModel, TpuDatapathModel, envelope_sweep
 
 __all__ = [
@@ -42,9 +42,11 @@ __all__ = [
     "UnfusedLeaf", "assign_groups", "group_sizes", "path_name",
     "plan_buckets", "resolve_policies",
     "aggregate_gradients", "init_ef_states", "make_policy_tree",
-    "Commander", "ControlPlane", "CusumGuard", "Predictor", "Supervisor",
+    "Commander", "CusumGuard", "Predictor", "Supervisor",
     "cosines_to_host", "group_cosines_from_mean", "group_cosines_from_workers",
-    "IciModel", "modeled_comm_time", "modeled_layout_comm_time",
-    "payload_bytes", "plan_traffic_ratio", "wire_bytes_per_device",
+    "IciModel", "MultiHopModel", "hop_wire_bytes_per_device",
+    "modeled_comm_time", "modeled_layout_comm_time",
+    "modeled_layout_multihop_time", "payload_bytes", "plan_traffic_ratio",
+    "wire_bytes_per_device",
     "ExposureModel", "TpuDatapathModel", "envelope_sweep",
 ]

@@ -20,14 +20,14 @@ plane writes only mode metadata; it does not inspect gradient payloads".
 
 This module holds the *math* of the three roles.  The control loop that
 sequences them (phase machine, telemetry schema, registry) lives in
-:mod:`repro.fabric.control`; the :class:`ControlPlane` class below is a
-deprecation shim over its ``"paper"`` controller.
+:mod:`repro.fabric.control` — its ``"paper"`` controller is the
+successor of the pre-registry ``ControlPlane`` class.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Mapping, Sequence
+from typing import Mapping
 
 from .buckets import AdmissionPlan, GroupPolicy
 from .modes import AggregationMode, Schedule
@@ -83,12 +83,22 @@ class Commander:
     Ladder (paper Section 8): G-Binary if its alignment passes, else
     G-Ternary, else FP32.  Groups listed in ``always_fp32`` (norms by
     default — scale-critical, tiny traffic) are never admitted.
+
+    ``binary_mode`` / ``ternary_mode`` are the codecs the two ladder
+    rungs admit; the cosine diagnostics are always keyed ``"gbinary"`` /
+    ``"gternary"`` (the admitted codec's *sign statistics* are what the
+    diagnostic measures, whatever transport realizes them), so pointing
+    a rung at a hierarchical plan — e.g.
+    ``Commander(binary_mode="hier_fp32_gbinary")`` — admits the per-hop
+    route under the same thresholds.
     """
     tau_binary: float = 0.35
     tau_ternary: float = 0.30
     always_fp32: tuple = ("norms",)
     schedule: Schedule | None = None
     error_feedback: bool = False
+    binary_mode: AggregationMode | str = AggregationMode.G_BINARY
+    ternary_mode: AggregationMode | str = AggregationMode.G_TERNARY
 
     def propose(self, cosines: Mapping[str, Mapping[str, float]]) -> AdmissionPlan:
         """cosines: group -> {'gbinary': cos, 'gternary': cos}."""
@@ -97,10 +107,10 @@ class Commander:
             if g in self.always_fp32:
                 policies[g] = GroupPolicy(AggregationMode.FP32)
             elif c.get("gbinary", 0.0) >= self.tau_binary:
-                policies[g] = GroupPolicy(AggregationMode.G_BINARY,
+                policies[g] = GroupPolicy(self.binary_mode,
                                           self.schedule, self.error_feedback)
             elif c.get("gternary", 0.0) >= self.tau_ternary:
-                policies[g] = GroupPolicy(AggregationMode.G_TERNARY,
+                policies[g] = GroupPolicy(self.ternary_mode,
                                           self.schedule, self.error_feedback)
             else:
                 policies[g] = GroupPolicy(AggregationMode.FP32)
@@ -183,7 +193,7 @@ class Supervisor:
 
 
 # ---------------------------------------------------------------------------
-# Control plane (mode-latch owner)
+# Control events (mode-latch audit trail)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -191,85 +201,3 @@ class ControlEvent:
     step: int
     kind: str            # warmup_end | admitted | recovery | readmitted
     plan_signature: str
-
-
-class ControlPlane:
-    """Deprecated shim over :mod:`repro.fabric.control`'s ``"paper"``
-    controller.
-
-    New code should use the controller registry directly::
-
-        from repro.fabric.control import make_controller, Telemetry
-        controller = make_controller("paper", warmup_steps=50)
-        plan = controller.observe(Telemetry(step=k, loss=loss, cosines=cos))
-
-    This wrapper keeps the historical ``step(loss, cosines=...)`` call
-    signature and the ``plan`` / ``events`` attributes, and — because it
-    forwards ``observe`` / ``state_dict`` / ``load_state_dict`` /
-    ``wants_diagnostics`` — still satisfies the
-    :class:`repro.fabric.control.Controller` protocol, so existing
-    ``Trainer(..., control=ControlPlane(...))`` call sites keep working.
-    Compared to the pre-registry plane, admission now *retries* while
-    calibration cosines are pending instead of firing only at exactly
-    ``step == warmup_steps`` (the silent never-admit failure mode), and a
-    ``warmup_end`` event precedes ``admitted``.
-    """
-
-    name = "paper"
-
-    def __init__(self, commander: Commander | None = None,
-                 supervisor: Supervisor | None = None,
-                 predictor: Predictor | None = None,
-                 warmup_steps: int = 20):
-        # lazy import: `core` stays importable without the fabric layer,
-        # and fabric.control imports this module's role classes
-        from ..fabric.control import PaperController
-        self._impl = PaperController(commander=commander,
-                                     supervisor=supervisor,
-                                     predictor=predictor,
-                                     warmup_steps=warmup_steps)
-
-    @property
-    def plan(self) -> AdmissionPlan:
-        return self._impl.plan
-
-    @property
-    def events(self) -> list["ControlEvent"]:
-        return self._impl.events
-
-    @property
-    def commander(self) -> Commander:
-        return self._impl.commander
-
-    @property
-    def supervisor(self) -> Supervisor:
-        return self._impl.supervisor
-
-    @property
-    def predictor(self) -> Predictor | None:
-        return self._impl.predictor
-
-    @property
-    def warmup_steps(self) -> int:
-        return self._impl.warmup_steps
-
-    @property
-    def wants_diagnostics(self) -> bool:
-        return self._impl.wants_diagnostics
-
-    def step(self, loss: float,
-             cosines: Mapping[str, Mapping[str, float]] | None = None
-             ) -> AdmissionPlan:
-        """Advance one step of policy; returns the plan for the *next* step."""
-        from ..fabric.control import Telemetry
-        return self._impl.observe(Telemetry(step=self._impl._observed + 1,
-                                            loss=loss, cosines=cosines))
-
-    def observe(self, telemetry) -> AdmissionPlan:
-        return self._impl.observe(telemetry)
-
-    def state_dict(self) -> dict:
-        return self._impl.state_dict()
-
-    def load_state_dict(self, state: dict) -> None:
-        self._impl.load_state_dict(state)

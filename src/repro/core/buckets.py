@@ -230,7 +230,10 @@ class BucketKey:
     e.g. an FP32 leaf nominally planned on ``packed_a2a`` fuses with
     plain ``psum`` leaves — exactly the collective the per-leaf path
     would have launched.  ``model_spec`` is None for fully local leaves;
-    TP-sharded leaves keep their spec (and are never fused).
+    TP-sharded leaves keep their spec (and are never fused).  ``hops``
+    is the codec's hop-plan signature (None for flat codecs), so buckets
+    never mix hierarchical routes — two plans over the same backbone
+    codec still launch separately.
     """
     mode: AggregationMode | str
     schedule: str
@@ -238,6 +241,7 @@ class BucketKey:
     gate_phase: int
     model_spec: Any
     dtype: str
+    hops: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -336,7 +340,8 @@ def leaf_bucket_key(policy, dtype) -> BucketKey:
         error_feedback=bool(policy.error_feedback),
         gate_phase=phase,
         model_spec=None if _trivial_spec(spec) else spec,
-        dtype=str(np.dtype(dtype)))
+        dtype=str(np.dtype(dtype)),
+        hops=getattr(_codec(mode), "hop_signature", None))
 
 
 def plan_buckets(params_like: Any, policies: Any, *,

@@ -134,14 +134,24 @@ def wire_schedule(mode, schedule) -> str:
         psum path — the paper's bypass semantics (and what the
         codec-bytes/element wire accounting assumes);
       * vote-reduction codecs nominally on ``psum`` travel on the dense
-        vote_psum path (a sign-vote codec has no FP32-mean realization).
+        vote_psum path (a sign-vote codec has no FP32-mean realization);
+      * hierarchical codecs (``reduction == "hierarchical"``, i.e. a
+        registered :class:`~repro.fabric.hierarchy.HopPlan`) carried on
+        any built-in flat schedule travel on the ``hierarchical``
+        backend — the flat names have no single-hop meaning for a
+        multi-hop route, whose per-hop transports are fixed by the plan.
 
     Every other schedule — including registered custom backends such as
     the ``sign_of_mean`` baseline — dispatches as named for every codec.
     """
     from ..fabric.codecs import get_codec
-    votes = get_codec(mode).reduction == "vote"
+    reduction = get_codec(mode).reduction
     name = schedule_name(schedule)
+    if reduction == "hierarchical":
+        if name in _VOTE_ONLY_SCHEDULES or name == Schedule.PSUM.value:
+            return "hierarchical"
+        return name
+    votes = reduction == "vote"
     if not votes and name in _VOTE_ONLY_SCHEDULES:
         return Schedule.PSUM.value
     if votes and name == Schedule.PSUM.value:

@@ -15,8 +15,7 @@ Two distinct views, kept separate exactly as in the paper:
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Mapping
+from typing import Mapping, Sequence
 
 from .buckets import AdmissionPlan, BucketLayout
 from .modes import (AggregationMode, Schedule, bits_per_element,
@@ -88,55 +87,49 @@ def wire_bytes_per_device(n_elements: int, mode: AggregationMode | str,
     return fn(n_elements, mode, num_workers, dtype_bytes=dtype_bytes)
 
 
+def hop_wire_bytes_per_device(n_elements: int, mode: AggregationMode | str,
+                              schedule: Schedule | str, num_workers: int,
+                              dtype_bytes: int = 4) -> tuple:
+    """Per-hop wire bytes per device: one entry per route leg.
+
+    Flat schedules are a single leg (the :func:`wire_bytes_per_device`
+    figure); hierarchical codecs (a registered
+    :class:`~repro.fabric.hierarchy.HopPlan`) report one leg per hop,
+    each priced by that hop backend's own ring model at the hop's
+    worker-group size.  ``sum(hop_wire_bytes_per_device(...)) ==
+    wire_bytes_per_device(...)`` always holds — the flat figure *is* the
+    route total.
+    """
+    from ..fabric import get_schedule
+    backend = get_schedule(wire_schedule(mode, schedule))
+    fn = getattr(backend, "hop_wire_bytes_per_device", None)
+    if fn is not None:
+        return tuple(float(b) for b in
+                     fn(n_elements, mode, num_workers,
+                        dtype_bytes=dtype_bytes))
+    return (wire_bytes_per_device(n_elements, mode, schedule, num_workers,
+                                  dtype_bytes=dtype_bytes),)
+
+
 # ---------------------------------------------------------------------------
 # modeled communication time (paper Fig 7, TPU-adapted)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True, init=False)
+@dataclasses.dataclass(frozen=True)
 class IciModel:
     """TPU v5e-like interconnect constants (see EXPERIMENTS.md §Roofline).
 
-    ``link_bytes_per_s`` is bytes/s per ICI link direction.  The old
-    field name ``link_gbps`` was misleading (the value was always
-    bytes/s, never Gbit/s); it survives as a deprecated constructor
-    kwarg and read-only property carrying the same bytes/s value.
+    ``link_bytes_per_s`` is bytes/s per ICI link direction.
     """
-    link_bytes_per_s: float          # bytes/s per ICI link direction
-    links_per_chip: float            # effective links usable by the collective
-    hop_latency_s: float             # per-step latency of a ring stage
-    launch_overhead_s: float         # fixed dispatch cost per collective
-                                     # launch (host dispatch + XLA ramp-up)
-
-    def __init__(self, link_bytes_per_s: float | None = None,
-                 links_per_chip: float = 1.0,
-                 hop_latency_s: float = 1e-6,
-                 launch_overhead_s: float = 20e-6, *,
-                 link_gbps: float | None = None) -> None:
-        if link_gbps is not None:
-            warnings.warn(
-                "IciModel(link_gbps=...) is deprecated: the field always "
-                "held bytes/s, not Gbit/s — pass link_bytes_per_s instead",
-                DeprecationWarning, stacklevel=2)
-            if link_bytes_per_s is not None:
-                raise TypeError("pass link_bytes_per_s or the deprecated "
-                                "link_gbps, not both")
-            link_bytes_per_s = link_gbps
-        if link_bytes_per_s is None:
-            link_bytes_per_s = 50e9
-        object.__setattr__(self, "link_bytes_per_s", float(link_bytes_per_s))
-        object.__setattr__(self, "links_per_chip", float(links_per_chip))
-        object.__setattr__(self, "hop_latency_s", float(hop_latency_s))
-        object.__setattr__(self, "launch_overhead_s",
-                           float(launch_overhead_s))
-
-    @property
-    def link_gbps(self) -> float:
-        """Deprecated alias for :attr:`link_bytes_per_s` (bytes/s)."""
-        warnings.warn(
-            "IciModel.link_gbps is deprecated (it holds bytes/s, not "
-            "Gbit/s); read link_bytes_per_s instead",
-            DeprecationWarning, stacklevel=2)
-        return self.link_bytes_per_s
+    #: bytes/s per ICI link direction
+    link_bytes_per_s: float = 50e9
+    #: effective links usable by the collective
+    links_per_chip: float = 1.0
+    #: per-step latency of a ring stage
+    hop_latency_s: float = 1e-6
+    #: fixed dispatch cost per collective launch (host dispatch + XLA
+    #: ramp-up)
+    launch_overhead_s: float = 20e-6
 
     def collective_time(self, per_device_bytes: float, num_workers: int,
                         num_launches: int = 1) -> float:
@@ -179,9 +172,58 @@ def modeled_layout_comm_time(layout: BucketLayout, num_workers: int,
     ici = ici or IciModel()
     total = 0.0
     for key, n in layout.launches():
-        b = wire_bytes_per_device(n, key.mode, key.schedule, num_workers)
-        total += ici.collective_time(b, num_workers)
+        # per-hop accounting: the launch's bytes are the sum of its route
+        # legs (a single leg for flat schedules); every leg of one launch
+        # shares the launch's dispatch + ring-stage latency term
+        legs = hop_wire_bytes_per_device(n, key.mode, key.schedule,
+                                         num_workers)
+        total += ici.collective_time(sum(legs), num_workers)
     return total
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiHopModel:
+    """Analytic counterpart of the sim's ``multihop`` topology.
+
+    Constants mirror :class:`repro.sim.topology.MultiHop` term for term
+    (the sim's ``multihop`` lane is validated against this model within
+    1% on degenerate single-launch cases, exactly as ``ici_ring`` is
+    validated against :class:`IciModel`): every route leg crosses its
+    own link at ``link_bytes_per_s``, each leg adds one
+    ``hop_latency_s``, and each launch pays one ``launch_overhead_s``.
+    """
+    #: bytes/s per inter-hop link (oversubscribed vs the 50e9 ICI ring)
+    link_bytes_per_s: float = 25e9
+    #: per-leg store-and-forward latency
+    hop_latency_s: float = 2e-6
+    #: fixed dispatch cost per launch
+    launch_overhead_s: float = 5e-6
+
+    def route_time(self, hop_bytes: Sequence[float],
+                   num_launches: int = 1) -> float:
+        """Serialized service of every leg + per-launch latency."""
+        legs = [float(b) for b in hop_bytes]
+        per_launch = (len(legs) * self.hop_latency_s
+                      + self.launch_overhead_s)
+        return (sum(legs) / self.link_bytes_per_s
+                + num_launches * per_launch)
+
+
+def modeled_layout_multihop_time(layout: BucketLayout, num_workers: int,
+                                 model: MultiHopModel | None = None) -> float:
+    """Modeled multihop comm time of one aggregation pass under a layout.
+
+    The hop-aware analogue of :func:`modeled_layout_comm_time`: each
+    launch's route legs come from :func:`hop_wire_bytes_per_device` (so
+    a hierarchical codec's intra-node and inter-node legs are priced
+    separately) and are fed to :meth:`MultiHopModel.route_time`.
+    """
+    model = model or MultiHopModel()
+    return sum(
+        model.route_time(
+            hop_wire_bytes_per_device(n, key.mode, key.schedule,
+                                      num_workers))
+        for key, n in layout.launches())
 
 
 #: Payload sizes used by the paper's Fig 7 positioning experiment.

@@ -8,8 +8,12 @@
     ``@register_schedule`` registry: *how the bytes move* (the
     extension seam for new collectives);
   * :mod:`backends` — built-in codec-parametric transports:
-    ``psum``/``fp32``, ``vote_psum``, ``packed_a2a``, plus the
-    Section-9 baselines;
+    ``psum``/``fp32``, ``vote_psum``, ``packed_a2a``, the
+    per-hop-recompressing ``hierarchical`` route, plus the Section-9
+    baselines;
+  * :mod:`hierarchy` — :class:`HopPlan`/:class:`HopSpec` hop routes and
+    ``register_hop_plan`` (built-ins ``hier_fp32_gbinary`` /
+    ``hier_fp32_gternary`` / ``hier_fp32_int4``);
   * :mod:`session`  — the :class:`Fabric` session object owning worker
     count, policy resolution, EF state, registry dispatch, and the
     per-plan jit cache;
@@ -34,6 +38,8 @@ from .registry import (AggregationContext, ScheduleBackend,
                        unregister_schedule)
 from . import backends as _backends          # registers the built-ins
 from . import extra_codecs as _extra_codecs  # registers int4 / topk
+from .hierarchy import (HierarchicalCodec, HopPlan, HopSpec,
+                        register_hop_plan, unregister_hop_plan)
 from .session import (CompiledStep, Fabric, TrainState, aggregate_leaf,
                       aggregate_tree, aggregate_tree_bucketed,
                       dp_num_workers)
@@ -50,6 +56,8 @@ __all__ = [
     "ring_wire_bytes", "unregister_codec",
     "AggregationContext", "ScheduleBackend", "available_schedules",
     "get_schedule", "register_schedule", "unregister_schedule",
+    "HierarchicalCodec", "HopPlan", "HopSpec", "register_hop_plan",
+    "unregister_hop_plan",
     "CompiledStep", "Fabric", "TrainState", "aggregate_leaf",
     "aggregate_tree", "aggregate_tree_bucketed", "dp_num_workers",
     "Controller", "ControlEvent", "FP32Controller", "PaperController",

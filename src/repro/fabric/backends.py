@@ -23,13 +23,16 @@ semantics stay bit-identical to the per-leaf path.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 
-from ..core.lowbit import (fp32_allreduce, lowbit_packed_a2a,
+from ..core.lowbit import (LeafPolicy, _ef_inject, _ef_update,
+                           fp32_allreduce, lowbit_packed_a2a,
                            lowbit_vote_psum, sign_of_mean)
-from ..core.modes import Schedule
+from ..core.modes import Schedule, wire_schedule
 from .codecs import get_codec, resolve_leaf_gate_mask, ring_wire_bytes
-from .registry import AggregationContext, register_schedule
+from .registry import AggregationContext, get_schedule, register_schedule
 
 
 @register_schedule(Schedule.PSUM, "fp32")
@@ -171,3 +174,116 @@ class SignOfMeanBackend:
         # legacy dtype_bytes knob for the same reason it does
         return ring_wire_bytes(get_codec("fp32").payload_bytes(n_elements),
                                num_workers)
+
+
+def _resolve_hop(hop):
+    """(backend, codec, wire-schedule name) for one HopSpec leg."""
+    hcodec = get_codec(hop.codec)
+    sched = wire_schedule(hop.codec,
+                          hop.schedule or hcodec.default_schedule)
+    return get_schedule(sched), hcodec, sched
+
+
+@register_schedule("hierarchical")
+class HierarchicalBackend:
+    """Per-hop-recompressing route: compose the hops' own transports.
+
+    The policy's codec must be a :class:`~repro.fabric.hierarchy.
+    HierarchicalCodec` (it carries the :class:`HopPlan`); each hop leg
+    dispatches to the hop codec's registered transport over that hop's
+    worker group only, so the gradient is re-encoded at every hop —
+    intra-node FP32 mean first, then the compressed inter-node vote on
+    the already-averaged values (DynamiQ's per-hop recompression shape).
+
+    Hop 0 runs over the *innermost* worker group.  With one
+    data-parallel axis, only 1-hop plans are runnable and the backend is
+    bit-identical to the flat backend of the plan's single codec; with
+    one axis per hop (``dp_axes=("outer", "inner")``), hop ``i`` reduces
+    over axis ``-1 - i``.
+
+    EF is threaded *around* the whole route (inject before hop 0, update
+    the residual from the injected gradient after the last hop) — the
+    exact external pattern the bucket layer uses, so per-leaf, fused,
+    and flat-backend EF all stay bit-identical.
+    """
+
+    name = "hierarchical"
+    fusable = True
+    threads_ef = True
+
+    @staticmethod
+    def _plan_of(codec):
+        plan = getattr(codec, "plan", None)
+        if plan is None:
+            raise TypeError(
+                f"codec {codec.name!r} rides the hierarchical schedule but "
+                f"carries no HopPlan; register it via "
+                f"repro.fabric.register_hop_plan")
+        return plan
+
+    @staticmethod
+    def _hop_contexts(ctx: AggregationContext, plan):
+        sizes = plan.group_sizes(ctx.num_workers)
+        h = len(plan.hops)
+        if not ctx.dp_axes:
+            axes = [()] * h
+        elif h == 1:
+            axes = [tuple(ctx.dp_axes)]
+        elif h == len(ctx.dp_axes):
+            # hop 0 = innermost (last) mesh axis, hop i = axis -1 - i
+            axes = [(ctx.dp_axes[-1 - i],) for i in range(h)]
+        else:
+            raise ValueError(
+                f"hop plan {plan.name!r} has {h} hops but the session has "
+                f"{len(ctx.dp_axes)} data-parallel axes "
+                f"({ctx.dp_axes!r}); map one axis per hop (innermost "
+                f"axis = hop 0) or use a 1-hop plan")
+        return [dataclasses.replace(ctx, dp_axes=a, num_workers=s)
+                for a, s in zip(axes, sizes)]
+
+    def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
+        codec = get_codec(policy.mode)
+        plan = self._plan_of(codec)
+        use_ef = (ef is not None and policy.error_feedback
+                  and codec.threads_ef)
+        g_eff, _ = _ef_inject(g, ef if use_ef else None)
+        u = g_eff
+        for hop, hop_ctx in zip(plan.hops, self._hop_contexts(ctx, plan)):
+            backend, _, sched = _resolve_hop(hop)
+            hop_policy = LeafPolicy(
+                mode=hop.codec, schedule=sched,
+                model_spec=getattr(policy, "model_spec", None),
+                gate_phase=policy.gate_phase, error_feedback=False)
+            u, _ = backend.aggregate(hop_ctx, u, hop_policy, None)
+        new_ef = _ef_update(g_eff, ef) if use_ef else ef
+        return u, new_ef
+
+    def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
+                       gate=None):
+        plan = self._plan_of(codec)
+        for hop, hop_ctx in zip(plan.hops, self._hop_contexts(ctx, plan)):
+            backend, hcodec, _ = _resolve_hop(hop)
+            # the zero gate belongs to the gated hop's majority stage;
+            # ungated hops (e.g. the intra-node fp32 mean) never see it
+            flat = backend.aggregate_flat(
+                hop_ctx, flat, hcodec,
+                gate=gate if hcodec.gated else None)
+        return flat
+
+    def hop_wire_bytes_per_device(self, n_elements: int, mode,
+                                  num_workers: int,
+                                  dtype_bytes: int = 4) -> tuple:
+        """Per-leg wire bytes: each hop's own model at its group size."""
+        codec = get_codec(mode)
+        plan = self._plan_of(codec)
+        legs = []
+        for hop, size in zip(plan.hops, plan.group_sizes(num_workers)):
+            backend, _, _ = _resolve_hop(hop)
+            legs.append(backend.wire_bytes_per_device(
+                n_elements, hop.codec, size, dtype_bytes=dtype_bytes))
+        return tuple(legs)
+
+    def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
+                              dtype_bytes: int = 4) -> float:
+        return float(sum(self.hop_wire_bytes_per_device(
+            n_elements, mode, num_workers, dtype_bytes=dtype_bytes)))

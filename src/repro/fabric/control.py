@@ -185,6 +185,14 @@ def plan_presets(error_feedback: bool = False) -> dict[str, AdmissionPlan]:
     argument (both codecs declare ``threads_ef=False`` — EF-signSGD
     residuals only thread through the vote codecs, so requesting EF
     would allocate residual buffers that never update).
+
+    The ``hier_*`` presets select the built-in hop plans
+    (:mod:`repro.fabric.hierarchy`): intra-node FP32 psum, then the
+    named low-bit codec on the inter-node backbone hop.
+    ``hier_fp32_gbinary`` / ``hier_fp32_gternary`` thread EF (the vote
+    hop declares ``threads_ef``, which the wrapping codec inherits);
+    ``hier_fp32_int4`` pins ``error_feedback=False`` for the same
+    reason ``int4_backbone`` does.
     """
     ef = error_feedback
     packed = Schedule.PACKED_A2A
@@ -215,6 +223,13 @@ def plan_presets(error_feedback: bool = False) -> dict[str, AdmissionPlan]:
         # codecs — see the docstring)
         "int4_backbone": AdmissionPlan.lowbit_backbone("int4"),
         "topk_backbone": AdmissionPlan.lowbit_backbone("topk"),
+        # hop-plan codecs (repro.fabric.hierarchy), addressed by name;
+        # the hierarchical schedule comes from their default_schedule
+        "hier_fp32_gbinary": AdmissionPlan.lowbit_backbone(
+            "hier_fp32_gbinary", error_feedback=ef),
+        "hier_fp32_gternary": AdmissionPlan.lowbit_backbone(
+            "hier_fp32_gternary", error_feedback=ef),
+        "hier_fp32_int4": AdmissionPlan.lowbit_backbone("hier_fp32_int4"),
     }
 
 

@@ -410,7 +410,8 @@ class Fabric:
         fus_sig = tuple(sorted((w, _registry_fusable(w)) for w in wires))
         modes = {codec_name(p.mode) for p in pol_leaves}
         codec_sig = tuple(sorted(
-            (m, get_codec(m).reduction, bool(get_codec(m).gated))
+            (m, get_codec(m).reduction, bool(get_codec(m).gated),
+             getattr(get_codec(m), "hop_signature", None))
             for m in modes))
         key = (treedef,
                tuple((tuple(l.shape), str(l.dtype)) for l in leaves),

@@ -45,7 +45,7 @@ def cell_skipped(cfg, cell) -> str | None:
 V5E_PEAK_FLOPS = 197e12
 SIM_MFU = 0.4
 #: topologies the dry-run's simulated-timeline section replays per cell
-SIM_TOPOLOGIES = ("ici_ring", "cxl_switched")
+SIM_TOPOLOGIES = ("ici_ring", "cxl_switched", "multihop")
 
 
 def run_train_cell(cfg, cell, mesh, plan_name: str,

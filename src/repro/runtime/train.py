@@ -80,12 +80,6 @@ def build_train_step(cfg: ModelConfig, mesh, optimizer: Optimizer,
 @dataclasses.dataclass
 class TrainerConfig:
     dp_axes: tuple = ("data",)
-    #: deprecated — warm-up/calibration length is owned by the attached
-    #: controller (e.g. ``make_controller("paper", warmup_steps=N)``);
-    #: the value here is accepted for backward compatibility and ignored,
-    #: which removes the old dual-knob failure mode where a disagreement
-    #: between Trainer and control plane made admission silently never fire.
-    warmup_steps: int | None = None
     checkpoint_interval: int = 100
     checkpoint_keep: int = 3
     log_interval: int = 10
@@ -102,11 +96,11 @@ class Trainer:
     ``tcfg.dp_axes``.
 
     Admission control is a pluggable controller: pass ``controller=``
-    (an instance or a ``@register_controller`` name), attach one to the
-    session beforehand (``fabric.attach_controller(...)``), or pass a
-    legacy ``control=ControlPlane(...)`` — all three drive the same
-    telemetry -> observe -> latch path.  ``plan=`` without a controller
-    is the static fast path (bit-identical to pre-controller behaviour).
+    (an instance or a ``@register_controller`` name) or attach one to
+    the session beforehand (``fabric.attach_controller(...)``) — both
+    drive the same telemetry -> observe -> latch path.  ``plan=``
+    without a controller is the static fast path (bit-identical to
+    pre-controller behaviour).
     """
 
     def __init__(self, cfg: ModelConfig, mesh, optimizer: Optimizer,
@@ -147,8 +141,7 @@ class Trainer:
         self.tcfg = tcfg
         self.rules = fabric.rules
         # controller resolution: explicit argument (new `controller=` or
-        # legacy `control=`, a ControlPlane shim also satisfies the
-        # protocol) > the session's attached controller
+        # legacy `control=`) > the session's attached controller
         if controller is not None and control is not None:
             raise ValueError("pass either controller= or the deprecated "
                              "control=, not both")

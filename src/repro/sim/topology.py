@@ -201,3 +201,23 @@ class MultiHop:
         return Route(hops=tuple(hops),
                      latency_s=(len(hops) * self.hop_latency_s
                                 + self.launch_overhead_s))
+
+    def route_hops(self, hop_bytes, num_workers: int,
+                   index: int = 0) -> Route:
+        """Route a launch whose per-leg bytes are already known.
+
+        Hierarchical launches (a :class:`~repro.fabric.hierarchy.HopPlan`
+        codec) carry their own per-hop wire bytes — each hop's codec
+        fixes its leg's payload — so the topology's geometric
+        ``compression``/``hops`` defaults are bypassed and the legs map
+        onto the per-stage links directly.  Term for term this is
+        :meth:`repro.core.traffic.MultiHopModel.route_time`, so the
+        queue-free single-launch simulation matches the analytic per-hop
+        model exactly.
+        """
+        hops = tuple(
+            Hop(f"hop{k}", float(b) / self.link_bytes_per_s, bytes=float(b))
+            for k, b in enumerate(hop_bytes))
+        return Route(hops=hops,
+                     latency_s=(len(hops) * self.hop_latency_s
+                                + self.launch_overhead_s))

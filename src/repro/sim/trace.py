@@ -33,7 +33,7 @@ from typing import Any, Sequence
 
 from ..core.buckets import BucketLayout
 from ..core.modes import AggregationMode, codec_name, schedule_name
-from ..core.traffic import wire_bytes_per_device
+from ..core.traffic import hop_wire_bytes_per_device
 from .datapath import FlitPipeline, datapath_time
 from .engine import Engine, ResourcePool
 from .topology import get_topology
@@ -45,6 +45,10 @@ class LaunchSpec:
 
     ``mode`` is a codec name (built-in enum member or any registered
     codec) — the datapath resolves its lane/flit timing from the codec.
+    ``hop_bytes`` carries the per-leg wire bytes of a hierarchical
+    launch (None for flat single-hop launches); topologies exposing
+    ``route_hops`` (e.g. ``multihop``) replay those legs on their
+    per-stage links instead of applying their own payload profile.
     """
     name: str
     mode: AggregationMode | str
@@ -52,6 +56,7 @@ class LaunchSpec:
     n_elements: int
     wire_bytes: float
     ready_s: float = 0.0
+    hop_bytes: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -222,7 +227,11 @@ def simulate_launches(specs: Sequence[LaunchSpec], num_workers: int, *,
 
     records: list[LaunchRecord] = []
     for i, spec in enumerate(specs):
-        route = topo.route(spec.wire_bytes, num_workers, i)
+        route_hops = getattr(topo, "route_hops", None)
+        if spec.hop_bytes is not None and route_hops is not None:
+            route = route_hops(spec.hop_bytes, num_workers, i)
+        else:
+            route = topo.route(spec.wire_bytes, num_workers, i)
         t_agg = (0.0 if datapath is None else
                  datapath_time(datapath, spec.n_elements, num_workers,
                                spec.mode))
@@ -288,10 +297,15 @@ def layout_launch_specs(layout: BucketLayout, num_workers: int, *,
             f"{len(layout.unfused)} unfused leaves)")
     specs = []
     for (name, key, size), ready in zip(entries, ready_times):
-        wb = wire_bytes_per_device(size, key.mode, key.schedule, num_workers)
-        specs.append(LaunchSpec(name=name, mode=key.mode,
-                                schedule=key.schedule, n_elements=size,
-                                wire_bytes=wb, ready_s=float(ready)))
+        legs = hop_wire_bytes_per_device(size, key.mode, key.schedule,
+                                         num_workers)
+        specs.append(LaunchSpec(
+            name=name, mode=key.mode, schedule=key.schedule,
+            n_elements=size, wire_bytes=float(sum(legs)),
+            ready_s=float(ready),
+            # only hierarchical (multi-leg) launches pin their own route
+            # legs; flat launches keep the topology's payload profile
+            hop_bytes=legs if len(legs) > 1 else None))
     return specs
 
 

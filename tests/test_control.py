@@ -22,7 +22,7 @@ import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.core import (AdmissionPlan, AggregationMode, Commander,
-                        ControlPlane, CusumGuard, Schedule, Supervisor)
+                        CusumGuard, Schedule, Supervisor)
 from repro.fabric import Fabric
 from repro.fabric.control import (Controller, FP32Controller,
                                   PaperController, Phase, PolicyProgram,
@@ -129,7 +129,6 @@ def test_unregister_controller_removes_aliases_too():
 def test_builtin_controllers_satisfy_protocol():
     assert isinstance(make_controller("paper"), Controller)
     assert isinstance(make_controller("static"), Controller)
-    assert isinstance(ControlPlane(), Controller)     # deprecation shim too
 
 
 # ---------------------------------------------------------------------------

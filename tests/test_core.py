@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (AdmissionPlan, AggregationMode, Commander,
-                        ControlPlane, CusumGuard, GroupPolicy, GroupRules,
+                        CusumGuard, GroupPolicy, GroupRules,
                         Predictor, Schedule, Supervisor, assign_groups,
                         bits_per_element, group_sizes,
                         group_cosines_from_workers, plan_traffic_ratio,
@@ -142,23 +142,30 @@ def test_commander_ladder():
 
 
 def test_control_plane_warmup_admit_recover_readmit():
-    cp = ControlPlane(warmup_steps=5,
-                      supervisor=Supervisor(
-                          guard=CusumGuard(kappa=0.0, h=0.3),
-                          cooldown_steps=5))
+    from repro.fabric import PaperController, Telemetry
+    cp = PaperController(warmup_steps=5,
+                         supervisor=Supervisor(
+                             guard=CusumGuard(kappa=0.0, h=0.3),
+                             cooldown_steps=5))
+    steps = iter(range(1, 10_000))
+
+    def observe(loss, cosines=None):
+        return cp.observe(Telemetry(step=next(steps), loss=loss,
+                                    cosines=cosines))
+
     cos = {"backbone": {"gbinary": 0.8, "gternary": 0.7},
            "head": {"gbinary": 0.1, "gternary": 0.1}}
     # warm-up: FP32
     for i in range(4):
-        plan = cp.step(1.0 - 0.01 * i)
+        plan = observe(1.0 - 0.01 * i)
         assert plan.signature() == AdmissionPlan.fp32_all().signature()
-    plan = cp.step(0.9, cosines=cos)   # step 5: admission
+    plan = observe(0.9, cosines=cos)   # step 5: admission
     assert plan.policy_for("backbone").mode == AggregationMode.G_BINARY
     assert plan.policy_for("head").mode == AggregationMode.FP32
     # degradation window -> recovery
     recovered = False
     for i in range(10):
-        plan = cp.step(0.9 + 0.2 * (i + 1))
+        plan = observe(0.9 + 0.2 * (i + 1))
         if plan.signature() == AdmissionPlan.fp32_all().signature():
             recovered = True
             break
@@ -167,7 +174,7 @@ def test_control_plane_warmup_admit_recover_readmit():
     assert "admitted" in kinds and "recovery" in kinds
     # healthy again -> re-admission after cooldown
     for i in range(20):
-        plan = cp.step(0.5, cosines=cos)
+        plan = observe(0.5, cosines=cos)
     assert plan.policy_for("backbone").mode == AggregationMode.G_BINARY
     assert "readmitted" in [e.kind for e in cp.events]
 

@@ -1,8 +1,6 @@
 """Direct unit tests for the analytic models the simulator validates
 against: ExposureModel.exposed, the envelope_sweep panel invariants, the
-layout communication-time model, and the IciModel field rename shim."""
-import warnings
-
+layout communication-time model, and the IciModel constants."""
 import jax
 import pytest
 
@@ -126,7 +124,7 @@ def test_layout_comm_time_fusion_strictly_wins():
 
 
 # ---------------------------------------------------------------------------
-# IciModel.link_gbps rename shim
+# IciModel bandwidth field
 # ---------------------------------------------------------------------------
 
 def test_ici_link_bytes_per_s_is_canonical():
@@ -135,22 +133,9 @@ def test_ici_link_bytes_per_s_is_canonical():
     assert m.collective_time(25e9, 2, num_launches=0) == pytest.approx(1.0)
 
 
-def test_ici_link_gbps_deprecated_but_compatible():
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        m = IciModel(link_gbps=25e9)
-        read = m.link_gbps
-    assert m.link_bytes_per_s == 25e9 and read == 25e9
-    assert sum(issubclass(w.category, DeprecationWarning)
-               for w in caught) == 2
-    # old-name and new-name constructions are the same model
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        assert IciModel(link_gbps=25e9) == IciModel(link_bytes_per_s=25e9)
-
-
-def test_ici_both_bandwidth_kwargs_rejected():
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        with pytest.raises(TypeError, match="not both"):
-            IciModel(link_bytes_per_s=1e9, link_gbps=2e9)
+def test_ici_link_gbps_removed():
+    # the PR-4 rename shim is gone: the misleading old name must not
+    # silently construct a different model
+    with pytest.raises(TypeError):
+        IciModel(link_gbps=25e9)
+    assert not hasattr(IciModel(), "link_gbps")

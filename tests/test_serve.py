@@ -61,6 +61,34 @@ def test_allocator_free_list_and_refcounts():
     assert a.num_free == 4
 
 
+def test_allocator_fork_copy_on_write_round_trip():
+    """Prefix-sharing contract for ``fork``: one more holder, no copy —
+    a shared block survives any non-final free and is released (and
+    LIFO-reused) only when the last holder drops it."""
+    a = BlockAllocator(3)
+    parent = a.allocate()
+    other = a.allocate()
+    child = a.fork(parent)
+    # fork hands back the same physical block (copy-on-write-free share)
+    assert child == parent and a.ref_count(parent) == 2
+    assert a.stats.forks == 1
+    # the first holder's free drops a reference but must not release
+    assert a.free(parent) is False
+    assert a.ref_count(parent) == 1 and a.num_in_use == 2
+    assert a.stats.releases == 0
+    # the last holder's free releases the block back to the pool...
+    assert a.free(child) is True
+    assert a.stats.releases == 1 and a.num_in_use == 1
+    # ...and the LIFO free list reuses the cache-warm block first
+    assert a.allocate() == parent
+    assert a.ref_count(parent) == 1
+    # a released block cannot be forked back to life
+    a.free(other)
+    with pytest.raises(ValueError, match="cannot fork unallocated"):
+        a.fork(other)
+    assert a.ref_count(other) == 0
+
+
 def test_allocator_exhaustion_raises():
     a = BlockAllocator(2)
     a.allocate(), a.allocate()

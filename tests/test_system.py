@@ -17,8 +17,9 @@ except ImportError:  # pragma: no cover - depends on installed jax
                 allow_module_level=True)
 
 from repro.core import (AdmissionPlan, AggregationMode, Commander,
-                        ControlPlane, CusumGuard, Schedule, Supervisor)
+                        CusumGuard, Schedule, Supervisor)
 from repro.data import SyntheticLMStream
+from repro.fabric import make_controller
 from repro.models import ModelConfig
 from repro.optim import SgdMomentum
 from repro.runtime import Trainer, TrainerConfig
@@ -60,14 +61,14 @@ def test_w1_majority_equals_sign():
 def test_adaptive_control_plane_drives_trainer():
     """Warm-up on FP32, then the Commander admits from live diagnostics."""
     data = SyntheticLMStream(vocab=256, seq_len=32, batch=8, seed=1)
-    control = ControlPlane(
+    control = make_controller(
+        "paper",
         commander=Commander(tau_binary=-1.0),   # always-admitting ladder
         supervisor=Supervisor(guard=CusumGuard(h=1e9)),
         warmup_steps=5)
     tr = Trainer(_cfg(), _mesh(), SgdMomentum(peak_lr=0.1, total_steps=40),
-                 data, control=control,
-                 tcfg=TrainerConfig(dp_axes=("data",), warmup_steps=5,
-                                    log_interval=1000))
+                 data, controller=control,
+                 tcfg=TrainerConfig(dp_axes=("data",), log_interval=1000))
     hist = tr.run(12)
     plans = [h["plan"] for h in hist]
     assert "gbinary" not in plans[0], "must warm up on FP32"
