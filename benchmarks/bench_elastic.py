@@ -1,0 +1,138 @@
+"""Elastic-training smoke bench: crash→rejoin, straggler ladder, replay.
+
+Three scenarios on a tiny dense LM over four virtual workers, reported
+as CSV rows and written machine-readably to ``BENCH_elastic.json`` (the
+nightly CI greps both):
+
+  * ``crash_rejoin`` — a scripted crash at step 9 (checkpoint interval
+    4 → one replayed step) with rejoin at 14, through the full
+    ElasticTrainer rollback/re-plan path: steps-to-recover and the
+    traffic overhead of replay;
+  * ``straggler``    — a 6x slowdown window on one worker under the
+    ``straggler_aware`` controller: the detector's Telemetry must flip
+    the admission ladder to low-bit and recover to FP32;
+  * ``replay``       — the same crash→rejoin-plus-straggler schedule
+    priced offline through ``repro.sim`` with per-phase exposed time.
+
+Results are computed once per process and shared with
+``bench_recovery`` (which appends the elastic rows to its Fig-6 table).
+"""
+import json
+import os
+
+import jax
+import numpy as np
+
+BENCH_ELASTIC_JSON = os.environ.get("BENCH_ELASTIC_JSON",
+                                    "BENCH_elastic.json")
+
+STEPS = 20
+WORKERS = 4
+CRASH = {"worker": 3, "step": 9, "rejoin_step": 14}
+STRAGGLER = {"worker": 1, "start": 3, "stop": 12, "factor": 6.0}
+
+_CACHE = {}
+
+
+def _cfg():
+    from repro.models import ModelConfig
+    return ModelConfig(name="bench-el", family="dense", num_layers=2,
+                       d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=128, dtype="float32", remat=False)
+
+
+def _run_scenarios() -> dict:
+    if _CACHE:
+        return _CACHE
+    import tempfile
+
+    from repro.core import AdmissionPlan, AggregationMode, Schedule
+    from repro.data import SyntheticLMStream
+    from repro.elastic import (ElasticConfig, ElasticTrainer,
+                               StragglerAwareController, replay_schedule)
+    from repro.models import init_params
+    from repro.optim import SgdMomentum
+
+    cfg = _cfg()
+    data = SyntheticLMStream(vocab=128, seq_len=16, batch=4, seed=0)
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY,
+                                         schedule=Schedule.VOTE_PSUM,
+                                         error_feedback=True)
+
+    def ecfg(**kw):
+        return ElasticConfig(synthetic_step_time_s=1e-3,
+                             log_interval=10_000, **kw)
+
+    # -- scenario 1: scripted crash -> rejoin through ElasticTrainer ----
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr = ElasticTrainer(cfg, SgdMomentum(peak_lr=0.2, total_steps=60),
+                            data, WORKERS, plan=plan, ckpt_dir=ckpt_dir,
+                            faults=[("crash", CRASH)],
+                            ecfg=ecfg(checkpoint_interval=4))
+        hist = tr.run(STEPS)
+    rep = tr.report()
+    crash_rejoin = {
+        **rep,
+        "final_loss": float(hist[-1]["loss"]),
+        "loss_finite": bool(all(np.isfinite(h["loss"]) for h in hist)),
+        "recovery_complete": bool(
+            rep["restarts"] == 1
+            and rep["final_view"]["workers"] == list(range(WORKERS))
+            and rep["steps"] == STEPS),
+    }
+
+    # -- scenario 2: straggler flips the admission ladder ---------------
+    ctrl = StragglerAwareController(demote_after=2, recover_after=6)
+    tr2 = ElasticTrainer(cfg, SgdMomentum(peak_lr=0.1, total_steps=80),
+                         data, WORKERS, controller=ctrl,
+                         faults=[("straggler", STRAGGLER)], ecfg=ecfg())
+    h2 = tr2.run(24)
+    kinds = [e.kind for e in ctrl.events]
+    straggler = {
+        "flagged_steps": int(sum(1 for h in h2 if h["stragglers"])),
+        "demoted": bool("demoted" in kinds),
+        "recovered": bool("recovered" in kinds),
+        "events": [{"step": e.step, "kind": e.kind} for e in ctrl.events],
+        "lowbit_steps": int(sum(1 for h in h2 if "gbinary" in h["plan"])),
+    }
+
+    # -- scenario 3: the same schedule priced offline through the DES ---
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    replay = replay_schedule(
+        params, plan, WORKERS, STEPS,
+        faults=[("crash", CRASH), ("straggler", STRAGGLER)],
+        topology="cxl_direct", compute_time_s=1e-4)
+
+    _CACHE.update(crash_rejoin=crash_rejoin, straggler=straggler,
+                  replay=replay.to_jsonable())
+    return _CACHE
+
+
+def elastic_rows():
+    """The elastic rows (shared with bench_recovery)."""
+    r = _run_scenarios()
+    cj, st, rp = r["crash_rejoin"], r["straggler"], r["replay"]
+    rec = cj["recoveries"][0]
+    out = [
+        ("elastic/crash_rejoin", 0.0,
+         f"steps_to_recover={rec['steps_to_recover']} "
+         f"traffic_overhead={cj['traffic_overhead']:.4f}x "
+         f"recovered={cj['recovery_complete']}"),
+        ("elastic/epoch_cache", 0.0,
+         f"compiled_steps={cj['compiled_steps']} "
+         f"final_epoch={cj['final_view']['epoch']}"),
+        ("elastic/straggler", 0.0,
+         f"flagged_steps={st['flagged_steps']} demoted={st['demoted']} "
+         f"recovered={st['recovered']}"),
+        ("elastic/replay", 0.0,
+         f"phases={rp['num_phases']} exposed_pct={rp['exposed_pct']:.3f} "
+         f"total_time_s={rp['total_time_s']:.5f}"),
+    ]
+    return out
+
+
+def rows():
+    out = elastic_rows()
+    with open(BENCH_ELASTIC_JSON, "w") as f:
+        json.dump(_run_scenarios(), f, indent=1, sort_keys=True)
+    return out

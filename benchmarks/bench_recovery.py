@@ -65,4 +65,9 @@ def rows():
                 f"admitted={'admitted' in kinds} "
                 f"recovered={'recovery' in kinds} "
                 f"readmitted={'readmitted' in kinds}"))
+
+    # elastic recovery rows (crash->rejoin, straggler ladder, replay);
+    # bench_elastic caches the scenario runs, so this never recomputes
+    from benchmarks.bench_elastic import elastic_rows
+    out.extend(elastic_rows())
     return out

@@ -19,7 +19,7 @@ import sys
 import time
 
 MODULES = ("datapath", "functional", "hardware", "comm_model", "sim",
-           "serve", "roofline", "recovery", "convergence")
+           "serve", "roofline", "recovery", "convergence", "elastic")
 
 
 def main() -> None:

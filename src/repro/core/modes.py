@@ -139,7 +139,12 @@ def wire_schedule(mode, schedule) -> str:
         registered :class:`~repro.fabric.hierarchy.HopPlan`) carried on
         any built-in flat schedule travel on the ``hierarchical``
         backend — the flat names have no single-hop meaning for a
-        multi-hop route, whose per-hop transports are fixed by the plan.
+        multi-hop route, whose per-hop transports are fixed by the plan;
+      * local-accumulation codecs (``reduction == "local"``, the
+        zero-wire ``local`` codec from :mod:`repro.elastic.strategies`)
+        carried on any built-in collective travel on ``local_accum`` —
+        a 0-bit payload on a real collective would ship FP32 bytes the
+        traffic model prices at zero.
 
     Every other schedule — including registered custom backends such as
     the ``sign_of_mean`` baseline — dispatches as named for every codec.
@@ -150,6 +155,10 @@ def wire_schedule(mode, schedule) -> str:
     if reduction == "hierarchical":
         if name in _VOTE_ONLY_SCHEDULES or name == Schedule.PSUM.value:
             return "hierarchical"
+        return name
+    if reduction == "local":
+        if name in _VOTE_ONLY_SCHEDULES or name == Schedule.PSUM.value:
+            return "local_accum"
         return name
     votes = reduction == "vote"
     if not votes and name in _VOTE_ONLY_SCHEDULES:

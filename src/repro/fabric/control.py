@@ -74,6 +74,13 @@ class Telemetry:
     step_time_s: float | None = None
     restart: bool = False
     plan_signature: str | None = None
+    # elastic extensions (repro.elastic): per-worker wall times keyed by
+    # worker id, the detector's flagged straggler set, and the membership
+    # epoch of the view the step ran under.  None/() on fixed-membership
+    # runs, so pre-elastic controllers are unaffected.
+    worker_step_times: Mapping[int, float] | None = None
+    stragglers: tuple = ()
+    membership_epoch: int | None = None
 
     @staticmethod
     def from_metrics(step: int, metrics: Mapping[str, Any], *,

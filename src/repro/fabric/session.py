@@ -312,9 +312,32 @@ class Fabric:
             self.num_workers = 1
         self.bucket_bytes = int(bucket_bytes)
         self.fused = bool(fused)
+        self.membership_epoch = 0        # bumped by bind_membership
         self.controller = None           # attached admission controller
         self._compiled: dict[tuple, CompiledStep] = {}
         self._layouts: dict[tuple, BucketLayout] = {}
+
+    # -- elastic membership ---------------------------------------------
+
+    def bind_membership(self, view) -> None:
+        """Bind this session to an epoch-numbered worker view.
+
+        ``view`` is any object with ``num_workers`` and ``epoch``
+        attributes (:class:`repro.elastic.WorkerView`).  Re-binding
+        updates ``num_workers`` and stamps the membership epoch into the
+        compiled-step cache key, so a jitted step built for an earlier
+        view can never be served after a re-plan.  Only mesh-free
+        (virtual-worker) sessions may change worker count — a mesh fixes
+        the DP extent at construction.
+        """
+        w, epoch = int(view.num_workers), int(view.epoch)
+        if self.mesh is not None and w != dp_num_workers(self.mesh,
+                                                         self.dp_axes):
+            raise ValueError(
+                f"cannot bind a {w}-worker view: mesh fixes the DP extent "
+                f"at {dp_num_workers(self.mesh, self.dp_axes)}")
+        self.num_workers = w
+        self.membership_epoch = epoch
 
     # -- admission controller -------------------------------------------
 
@@ -610,8 +633,12 @@ class Fabric:
         share one session without cross-model cache hits.
         """
         use_fused = self.fused if fused is None else fused
+        # num_workers + membership epoch: a step compiled for one worker
+        # view must never be served after an elastic re-plan, even when
+        # the rejoined view happens to have the same worker count
         key = (plan.signature(), with_diagnostics, zero1, grad_accum,
-               cfg, optimizer, loss, use_fused)
+               cfg, optimizer, loss, use_fused,
+               self.num_workers, self.membership_epoch)
         if key not in self._compiled:
             self._compiled[key] = self.build_step(
                 cfg, optimizer, plan, params_like,

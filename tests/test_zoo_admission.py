@@ -1,0 +1,80 @@
+"""Config-zoo admission dryrun: layer-aware admission beyond two cells.
+
+The paper validates admission on one vision and one NLP model; the zoo
+sweep (ISSUE 8 satellite / ROADMAP item 4) demonstrates the same
+layer-aware plan machinery across four heterogeneous architectures —
+MoE (routers), hybrid attention/SSM, pure SSM (xLSTM), and an
+encoder-decoder audio model — without touching a device: abstract
+params, the Commander ladder on synthetic calibration cosines, bucket
+planning, traffic accounting, and one DES replay per architecture.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AggregationMode, Commander, codec_name,
+                        plan_traffic_ratio)
+from repro.fabric import Fabric
+from repro.models import init_params
+from repro.sim import simulate_layout
+
+ZOO = ("deepseek_moe_16b", "hymba_1p5b", "xlstm_125m", "whisper_tiny")
+
+#: healthy calibration: backbone sign-alignment passes the binary rung
+_COSINES = {"backbone": {"gbinary": 0.9, "gternary": 0.85},
+            "embed": {"gbinary": 0.9, "gternary": 0.85},
+            "head": {"gbinary": 0.9, "gternary": 0.85},
+            "norms": {"gbinary": 0.9, "gternary": 0.85}}
+
+
+@pytest.fixture(scope="module")
+def fabric():
+    return Fabric(num_workers=8)
+
+
+@pytest.mark.parametrize("arch", ZOO)
+def test_zoo_admission_dryrun(arch, fabric):
+    cfg = get_config(arch, smoke=True)
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    sizes = fabric.group_sizes(params)
+    assert "backbone" in sizes and sizes["backbone"] > 0
+
+    # admission: present only the groups this architecture actually has
+    cosines = {g: _COSINES[g] for g in sizes}
+    plan = Commander().propose(cosines)
+    assert codec_name(plan.policy_for("backbone").mode) == "gbinary"
+    # scale-critical groups never admit, whatever their cosines say
+    assert plan.policy_for("norms").mode is AggregationMode.FP32
+    # default (unlisted groups) stays on the FP32 bypass
+    assert plan.default.mode is AggregationMode.FP32
+
+    # bucket planning fuses the admitted backbone into few launches
+    layout = fabric.layout_for(params, plan)
+    num_leaves = len(jax.tree.leaves(params))
+    assert 0 < layout.num_launches <= num_leaves
+
+    # traffic: strictly below FP32, strictly above zero
+    ratio = plan_traffic_ratio(sizes, plan)
+    assert 0.0 < ratio < 1.0, (arch, ratio)
+
+    # the admitted layout replays through the DES on a CXL topology
+    rep = simulate_layout(layout, fabric.num_workers,
+                          topology="cxl_switched", compute_time_s=1e-3)
+    assert rep.num_launches == layout.num_launches
+    assert rep.step_time_s > 0.0
+    assert 0.0 <= rep.exposed_pct <= 100.0
+
+
+@pytest.mark.parametrize("arch", ZOO)
+def test_zoo_routers_and_heads_grouped_head(arch, fabric):
+    """MoE routers / output heads land in the never-admitted groups."""
+    cfg = get_config(arch, smoke=True)
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    sizes = fabric.group_sizes(params)
+    if cfg.moe is not None:
+        assert "head" in sizes, f"{arch}: router leaves must map to head"
+    # every group the rules produce is coverable by the Commander table
+    assert set(sizes) <= set(_COSINES)
