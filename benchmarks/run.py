@@ -11,23 +11,48 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_roofline     — §Roofline source (reads results/dryrun)
   bench_sim          — repro.sim scenario sweep (writes BENCH_sim.json)
   bench_serve        — repro.serve trace replay (writes BENCH_serve.json)
+  bench_elastic      — repro.elastic fault replay (writes BENCH_elastic.json)
+  bench_tune         — repro.tune autotuner vs presets (writes BENCH_tune.json)
 
-Usage: python -m benchmarks.run [--only datapath,comm_model]
+Usage: python -m benchmarks.run [--modules datapath,comm_model]
+(``--only`` is accepted as a legacy alias of ``--modules``.)
 """
 import argparse
 import sys
 import time
 
 MODULES = ("datapath", "functional", "hardware", "comm_model", "sim",
-           "serve", "roofline", "recovery", "convergence", "elastic")
+           "serve", "roofline", "recovery", "convergence", "elastic",
+           "tune")
+
+
+def parse_modules(spec: str | None) -> list[str]:
+    """``--modules`` value -> validated module list (None = all).
+
+    Unknown names fail fast with the available set — a CI smoke job
+    filtering on a misspelled module would otherwise silently run
+    nothing and pass its gate.
+    """
+    if not spec:
+        return list(MODULES)
+    selected = [m.strip() for m in spec.split(",") if m.strip()]
+    unknown = [m for m in selected if m not in MODULES]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark module(s) {','.join(unknown)}; "
+            f"available: {','.join(MODULES)}")
+    if not selected:
+        raise SystemExit("empty --modules filter; available: "
+                         + ",".join(MODULES))
+    return selected
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
+    ap.add_argument("--modules", "--only", default=None, dest="modules",
                     help="comma-separated subset of: " + ",".join(MODULES))
     args = ap.parse_args()
-    selected = args.only.split(",") if args.only else list(MODULES)
+    selected = parse_modules(args.modules)
 
     print("name,us_per_call,derived")
     failures = 0

@@ -50,7 +50,8 @@ __all__ = [
     "Phase", "PolicyProgram", "StaticController", "Telemetry",
     "available_controllers", "get_controller", "make_controller",
     "plan_from_jsonable", "plan_presets", "plan_to_jsonable",
-    "register_controller", "unregister_controller",
+    "register_controller", "register_plan_preset",
+    "unregister_controller", "unregister_plan_preset",
 ]
 
 
@@ -237,7 +238,55 @@ def plan_presets(error_feedback: bool = False) -> dict[str, AdmissionPlan]:
         "hier_fp32_gternary": AdmissionPlan.lowbit_backbone(
             "hier_fp32_gternary", error_feedback=ef),
         "hier_fp32_int4": AdmissionPlan.lowbit_backbone("hier_fp32_int4"),
+        # registered extras (tuned plans, user presets) merge last under
+        # their own names; they are concrete plans, so — like the
+        # extension-codec presets — the error_feedback argument does not
+        # rewrite them
+        **_EXTRA_PRESETS,
     }
+
+
+#: runtime-registered presets (``TunedPlan.install()``, tests, user
+#: code) merged into every :func:`plan_presets` call.  Plans here are
+#: concrete :class:`AdmissionPlan` values, keyed by name.
+_EXTRA_PRESETS: dict[str, AdmissionPlan] = {}
+
+#: built-in preset names, frozen once at import: the guard that keeps
+#: ``register_plan_preset`` from shadowing e.g. ``"fp32"``
+_BUILTIN_PRESET_NAMES = frozenset(plan_presets())
+
+
+def register_plan_preset(name: str, plan: AdmissionPlan, *,
+                         override: bool = False) -> None:
+    """Register a named plan so :func:`plan_presets` resolves it.
+
+    The preset seam for plans that are *data*, not code — a
+    :class:`repro.tune.TunedPlan` installs its winner here so the
+    launcher's ``--plan``, :class:`StaticController`, and dry-run
+    tooling address it by name.  Built-in names are never overridable
+    (a tuned plan shadowing ``"fp32"`` would poison every baseline);
+    re-registering an extra name raises unless ``override=True``.
+    """
+    name = str(name)
+    if name in _BUILTIN_PRESET_NAMES:
+        raise ValueError(f"cannot replace built-in plan preset {name!r}; "
+                         f"pick another name")
+    if name in _EXTRA_PRESETS and not override:
+        raise ValueError(f"plan preset {name!r} already registered; pass "
+                         f"override=True to replace it")
+    if not isinstance(plan, AdmissionPlan):
+        raise TypeError(f"expected an AdmissionPlan, got {type(plan).__name__}")
+    _EXTRA_PRESETS[name] = plan
+
+
+def unregister_plan_preset(name: str) -> None:
+    """Remove a runtime-registered preset (built-ins cannot be removed)."""
+    if name in _BUILTIN_PRESET_NAMES:
+        raise ValueError(f"cannot unregister built-in plan preset {name!r}")
+    if name not in _EXTRA_PRESETS:
+        raise KeyError(f"no registered plan preset {name!r}; extras: "
+                       f"{tuple(sorted(_EXTRA_PRESETS))}")
+    del _EXTRA_PRESETS[name]
 
 
 # ---------------------------------------------------------------------------

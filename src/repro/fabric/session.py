@@ -505,6 +505,36 @@ class Fabric:
                                compute_time_s=compute_time_s,
                                ready_times=ready_times, **topology_kwargs)
 
+    # -- plan autotuning ------------------------------------------------
+
+    def autotune(self, params_like: Any, space: Any | None = None, *,
+                 topology: str = "ici_ring", strategy: Any = "grid",
+                 shortlist: int = 8, objective: Any | None = None,
+                 compute_time_s: float = 0.0,
+                 overlap_fraction: float = 1.0,
+                 pspecs: Any | None = None, name: str | None = None,
+                 error_feedback: bool = False, **topology_kwargs):
+        """Search a plan space for this session's best configuration.
+
+        Thin session entry point over :func:`repro.tune.autotune` (the
+        tune package is imported lazily — fabric does not depend on it
+        at module load).  ``params_like`` may be abstract
+        ShapeDtypeStructs; ``space`` defaults to
+        :func:`repro.tune.default_space` (all presets + generated
+        low-bit axes, classifier head pinned to FP32).  Returns a
+        :class:`repro.tune.TunedPlan`; ``tuned.apply(self)`` adopts its
+        bucket budget and ``tuned.install()`` registers it as a named
+        preset.
+        """
+        from ..tune import autotune as _autotune
+        return _autotune(self, params_like, space, topology=topology,
+                         strategy=strategy, shortlist=shortlist,
+                         objective=objective,
+                         compute_time_s=compute_time_s,
+                         overlap_fraction=overlap_fraction, pspecs=pspecs,
+                         name=name, error_feedback=error_feedback,
+                         **topology_kwargs)
+
     # -- step builder ---------------------------------------------------
 
     def build_step(self, cfg, optimizer, plan: AdmissionPlan,

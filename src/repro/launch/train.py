@@ -25,7 +25,9 @@ import os
 _PLAN_CHOICES = ["fp32", "gbin_backbone", "gbin_vote", "gbin_packed",
                  "gter_backbone", "gter_vote", "lowbit_all",
                  "gbin_packed_all", "gbin_packed_embed",
-                 "int4_backbone", "topk_backbone", "adaptive"]
+                 "int4_backbone", "topk_backbone",
+                 "hier_fp32_gbinary", "hier_fp32_gternary",
+                 "hier_fp32_int4", "adaptive"]
 
 
 def main():
@@ -42,6 +44,17 @@ def main():
     ap.add_argument("--controller", default=None,
                     help="registered admission controller driving the run "
                          "(e.g. paper, static, fp32); overrides --plan")
+    ap.add_argument("--autotune", action="store_true",
+                    help="search plan_presets + generated low-bit plans "
+                         "offline (repro.tune) and train on the winner; "
+                         "overrides --plan / --controller")
+    ap.add_argument("--autotune-topology", default="ici_ring",
+                    help="sim topology the autotuner certifies against")
+    ap.add_argument("--autotune-strategy", default="grid",
+                    help="registered search strategy (grid, random, "
+                         "successive_halving)")
+    ap.add_argument("--autotune-out", default=None,
+                    help="write the TunedPlan artifact JSON here")
     ap.add_argument("--warmup-steps", type=int, default=20,
                     help="FP32 calibration window of the paper controller")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
@@ -86,14 +99,35 @@ def main():
     optimizer = opt_cls(peak_lr=args.lr, total_steps=args.steps)
 
     plans = plan_presets(error_feedback=args.error_feedback)
-    assert set(_PLAN_CHOICES) == set(plans) | {"adaptive"}, \
+    # built-in choices must all resolve; plan_presets may additionally
+    # carry runtime-registered extras (register_plan_preset), which the
+    # static --help choices deliberately don't enumerate
+    assert set(_PLAN_CHOICES) - {"adaptive"} <= set(plans), \
         "launcher plan choices drifted from plan_presets()"
 
     fabric = Fabric(mesh, dp_axes)
     plan = None
     controller_name = args.controller or (
         "paper" if args.plan == "adaptive" else None)
-    if controller_name in ("paper", "adaptive"):
+    if args.autotune:
+        from ..models import init_params
+        params_like = jax.eval_shape(
+            lambda: init_params(jax.random.key(args.seed), cfg))
+        tuned = fabric.autotune(params_like,
+                                topology=args.autotune_topology,
+                                strategy=args.autotune_strategy,
+                                error_feedback=args.error_feedback)
+        if args.autotune_out:
+            tuned.save(args.autotune_out)
+        logging.getLogger("repro.launch").info(
+            "autotuned plan %s (%s): step=%.1fus, %d runners-up",
+            tuned.name, tuned.plan.signature(),
+            tuned.score.step_time_s * 1e6, len(tuned.runners_up))
+        tuned.apply(fabric)     # adopt the tuned bucket budget
+        # the "tuned" controller latches the winner and re-ranks the
+        # sim-certified shortlist from live step times
+        fabric.attach_controller("tuned", tuned=tuned)
+    elif controller_name in ("paper", "adaptive"):
         fabric.attach_controller(controller_name,
                                  warmup_steps=args.warmup_steps)
     elif controller_name == "static":

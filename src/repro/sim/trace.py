@@ -126,6 +126,11 @@ class SimReport:
         return (max(l.end_s for l in self.launches)
                 - min(l.start_s for l in self.launches))
 
+    @property
+    def wire_bytes_total(self) -> float:
+        """Per-device bytes crossing links, summed over all launches."""
+        return float(sum(l.wire_bytes for l in self.launches))
+
     def telemetry(self, step: int, loss: float, **kwargs):
         """Adapt this report into a runtime Telemetry record.
 
@@ -146,6 +151,7 @@ class SimReport:
             "num_launches": self.num_launches,
             "step_time_s": self.step_time_s,
             "comm_time_s": self.comm_time_s,
+            "wire_bytes_total": self.wire_bytes_total,
             "exposed_s": self.exposed_s,
             "exposed_pct": self.exposed_pct,
             "hidden": self.hidden,

@@ -176,6 +176,66 @@ def test_plan_presets_match_launcher_vocabulary():
     assert not presets["gbin_backbone"].policy_for("backbone").error_feedback
 
 
+def test_every_preset_json_roundtrip_is_canonical():
+    """Every plan_presets entry — including hier_* hop plans and the
+    int4/topk extension codecs — resolves its leaf policies, survives
+    JSON, and re-resolves to the same canonical codec/schedule names."""
+    import jax
+
+    from repro.core.modes import codec_name, schedule_name
+    from repro.fabric import get_codec
+
+    sds = jax.ShapeDtypeStruct
+    tree = {"wte": sds((512, 64), "float32"),
+            "h00": {"qkv": sds((64, 192), "float32"),
+                    "ln1_scale": sds((64,), "float32")},
+            "head_w": sds((64, 512), "float32")}
+    fab = Fabric(num_workers=4)
+    for name, plan in plan_presets(error_feedback=True).items():
+        # resolves: every leaf policy's codec is registered and its
+        # wire schedule has a name
+        policies = fab.resolve(tree, plan)
+        for pol in jax.tree.leaves(
+                policies, is_leaf=lambda x: hasattr(x, "mode")):
+            get_codec(pol.mode)
+        back = plan_from_jsonable(json.loads(
+            json.dumps(plan_to_jsonable(plan))))
+        assert back.signature() == plan.signature(), name
+        for group in ("backbone", "head", "norms", "embed"):
+            a, b = plan.policy_for(group), back.policy_for(group)
+            assert codec_name(a.mode) == codec_name(b.mode), (name, group)
+            assert schedule_name(a.resolved_schedule()) == \
+                schedule_name(b.resolved_schedule()), (name, group)
+            assert a.error_feedback == b.error_feedback, (name, group)
+
+
+def test_register_plan_preset_roundtrip_and_builtin_guard():
+    from repro.fabric.control import (register_plan_preset,
+                                      unregister_plan_preset)
+
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_TERNARY)
+    register_plan_preset("my_tuned", plan)
+    try:
+        assert plan_presets()["my_tuned"].signature() == plan.signature()
+        # duplicate registration raises unless override
+        with pytest.raises(ValueError, match="already registered"):
+            register_plan_preset("my_tuned", AdmissionPlan.fp32_all())
+        register_plan_preset("my_tuned", AdmissionPlan.fp32_all(),
+                             override=True)
+        assert plan_presets()["my_tuned"].signature() == \
+            AdmissionPlan.fp32_all().signature()
+    finally:
+        unregister_plan_preset("my_tuned")
+    assert "my_tuned" not in plan_presets()
+    # built-ins are never shadowable or removable
+    with pytest.raises(ValueError, match="built-in"):
+        register_plan_preset("fp32", plan, override=True)
+    with pytest.raises(ValueError, match="built-in"):
+        unregister_plan_preset("fp32")
+    with pytest.raises(KeyError):
+        unregister_plan_preset("never_registered")
+
+
 # ---------------------------------------------------------------------------
 # the paper controller's event sequence on a scripted loss curve
 # ---------------------------------------------------------------------------

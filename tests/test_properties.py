@@ -210,3 +210,39 @@ def test_gate_words_match_bucket_gate_mask(n, phase, seed):
     np.testing.assert_array_equal(bits[:n + n2], mask.astype(np.uint32))
     np.testing.assert_array_equal(
         np.asarray(gate.vector(jnp.float32)), mask.astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), perm_seed=st.integers(0, 2**31 - 1),
+       bucket_bytes=st.sampled_from([1, 4096, 256 * 1024]))
+def test_bucket_layout_insertion_order_invariant(seed, perm_seed,
+                                                 bucket_bytes):
+    """plan_buckets is a pure function of the *canonical* tree, not of
+    dict insertion order: permuting the order keys were inserted in
+    yields a bit-identical BucketLayout (pytree flattening sorts dict
+    keys, and the planner adds no ordering of its own)."""
+    import jax
+
+    from repro.core import plan_buckets, resolve_policies
+
+    rng = np.random.RandomState(seed)
+    sds = jax.ShapeDtypeStruct
+    names = ["wte", "head_w", "ln_scale", "h00/qkv", "h00/proj",
+             "h01/fc_in", "h01/fc_out", "bias"]
+    shapes = [(rng.randint(1, 64), rng.randint(1, 64)) for _ in names]
+    tree = {n: sds(s, "float32") for n, s in zip(names, shapes)}
+
+    perm = np.random.RandomState(perm_seed).permutation(len(names))
+    permuted = {}
+    for i in perm:
+        permuted[names[i]] = tree[names[i]]
+    assert list(permuted) != list(tree) or (perm == np.arange(
+        len(names))).all()
+
+    plan = AdmissionPlan.lowbit_backbone(AggregationMode.G_BINARY)
+    layouts = []
+    for t in (tree, permuted):
+        policies = resolve_policies(t, plan)
+        layouts.append(plan_buckets(t, policies,
+                                    bucket_bytes=bucket_bytes))
+    assert layouts[0] == layouts[1]
