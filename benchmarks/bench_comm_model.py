@@ -91,8 +91,10 @@ def _codec_rows(ici):
     same way: bits/element from the codec, modeled traffic ratio of a
     low-bit-backbone plan, fused-launch count of the resulting bucket
     layout, and the modeled layout comm time.  The per-codec summary is
-    also written to ``BENCH_codecs.json`` so the perf trajectory of a
-    newly registered codec is tracked run-over-run.
+    merged into ``BENCH_codecs.json`` (read-modify-write: the
+    ``fused_datapath`` keys written by ``bench_datapath`` survive, in
+    either run order) so the perf trajectory of a newly registered
+    codec is tracked run-over-run.
     """
     params = _gpt2_xl_leaves()
     sizes = group_sizes(params)
@@ -117,10 +119,10 @@ def _codec_rows(ici):
                     f"bits={codec.bits_per_element:.3g} "
                     f"traffic_ratio={ratio:.4f} "
                     f"launches={layout.num_launches}"))
-    with open(BENCH_CODECS_JSON, "w") as f:
-        json.dump(bench, f, indent=1, sort_keys=True)
+    from benchmarks.bench_datapath import merge_bench_json
+    merge_bench_json(BENCH_CODECS_JSON, bench)
     out.append(("comm_model/codec/bench_json", 0.0,
-                f"wrote {BENCH_CODECS_JSON} ({len(bench)} codecs)"))
+                f"merged {BENCH_CODECS_JSON} ({len(bench)} codecs)"))
     return out
 
 

@@ -1,13 +1,19 @@
 """Paper Section 5 (Table 4, Fig 2-3): datapath timing exposure, TPU-adapted.
 
-Two evidence sources:
+Three evidence sources:
   * measured wall-time of the controller-datapath kernels on the functional
-    (interpret) path — the byte-exact reference implementation;
+    (interpret) path — the byte-exact reference implementation — staged
+    chain vs the codec-owned fused kernels (repro.kernels.fused);
+  * modeled per-bucket kernel-launch counts and HBM bytes of the fused vs
+    unfused pipelines from each codec's KernelSet accounting (merged into
+    BENCH_codecs.json for the nightly fused-vs-unfused gate);
   * the analytic exposure model with v5e constants:
     T_exposed = max(0, T_agg - T_overlap), swept over link bandwidth,
     datapath depth, admitted fraction, and telemetry staleness (Fig 3
     panels a-d).
 """
+import json
+import os
 import time
 
 import jax
@@ -18,6 +24,26 @@ from repro import kernels as K
 from repro.core.exposure import ExposureModel, TpuDatapathModel, envelope_sweep
 from repro.core.traffic import wire_bytes_per_device
 from repro.core.modes import AggregationMode, Schedule
+
+#: same file bench_comm_model writes — both writers read-modify-write so
+#: module order within a run (and partial runs) cannot drop keys
+BENCH_CODECS_JSON = os.environ.get("BENCH_CODECS_JSON", "BENCH_codecs.json")
+
+
+def merge_bench_json(path, updates):
+    """Read-modify-write merge of per-codec dicts into a bench JSON."""
+    bench = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                bench = json.load(f)
+        except (OSError, ValueError):
+            bench = {}
+    for name, d in updates.items():
+        bench.setdefault(name, {}).update(d)
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    return bench
 
 
 def _time(fn, *args, reps=3):
@@ -83,6 +109,8 @@ def rows():
                     f"flit_pipeline_us={t_pipe * 1e6:.1f} "
                     f"lane={pipe.lane(name).name}"))
 
+    out.extend(fused_rows())
+
     # Fig 3 envelope sweep
     sweep = envelope_sweep()
     worst_a = max(sweep["a"], key=lambda r: r["exposed_pct"])
@@ -96,6 +124,81 @@ def rows():
     out.append(("exposure/telemetry_staleness_10steps", 0.0,
                 f"amortized_cost={d10['amortized_step_cost_pct']:.3f}pct"))
     out.extend(sim_rows())
+    return out
+
+
+def fused_rows():
+    """Fused vs unfused datapath: measured wall time + modeled accounting.
+
+    Wall time compares the staged interpret-mode chain (pack -> popcount
+    -> majority -> unpack) against the single fused ``vote_pipeline``
+    kernel on the same payload, and the staged int4 reference against
+    the one-launch two-phase quant kernel.  The modeled section prices
+    every registered codec that brings a :class:`KernelSet` — launch
+    count and HBM bytes per 8M-element bucket at W=32, fused vs unfused
+    — and merges the numbers into ``BENCH_codecs.json`` under each
+    codec's ``fused_datapath`` key (the nightly gate asserts
+    fused launches < unfused and fused HBM <= unfused there).
+    """
+    from repro.fabric import available_codecs, get_codec
+    from repro.kernels import fused, ref
+
+    out = []
+    rng = np.random.RandomState(1)
+    w, m = 8, 2048
+    stack = jnp.asarray(rng.randn(w, m, 128), jnp.float32)
+    gate = fused.local_gate_words(m // ref.PACK, ternary=True)
+
+    def staged(s):
+        words = jnp.stack([K.pack_signs(s[i], interpret=True)
+                           for i in range(w)])
+        counts = K.popcount_stack(words, interpret=True)
+        sw, mw = K.majority_decode(counts, num_workers=w, gate_words=gate,
+                                   interpret=True)
+        return K.unpack_ternary(sw, mw, interpret=True)
+
+    t_staged = _time(staged, stack)
+    t_fused = _time(lambda s: fused.vote_pipeline(
+        s, gate, num_workers=w, interpret=True), stack)
+    out.append(("datapath/fused/vote_staged_4op", t_staged, "W=8 interpret"))
+    out.append(("datapath/fused/vote_pipeline_1op", t_fused,
+                f"W=8 interpret vs_staged={t_staged / t_fused:.2f}x "
+                "(interpret-mode wall; the modeled rows are the perf claim)"))
+
+    plane = jnp.asarray(rng.randn(m, 128), jnp.float32)
+    t_ref = _time(jax.jit(ref.int4_quant_plane), plane)
+    t_k = _time(lambda p: fused.int4_quant_plane(p, interpret=True), plane)
+    out.append(("datapath/fused/int4_staged", t_ref, "jit ref"))
+    out.append(("datapath/fused/int4_kernel_1op", t_k, "interpret"))
+
+    # modeled per-bucket accounting, per codec kernel set
+    n, W = 8 << 20, 32
+    updates = {}
+    for name in available_codecs():
+        codec = get_codec(name)
+        hook = getattr(codec, "pallas_kernels", None)
+        ks = hook() if hook is not None else None
+        if ks is None:
+            continue
+        ef = bool(codec.threads_ef)
+        row = {"kernel_signature": ks.signature()}
+        for path, is_fused in (("fused", True), ("unfused", False)):
+            row[f"launches_{path}"] = ks.launches(fused=is_fused,
+                                                  distributed=True, ef=ef)
+            row[f"hbm_bytes_{path}"] = ks.hbm_bytes(
+                n, num_workers=W, fused=is_fused, distributed=True, ef=ef)
+        updates[name] = {"fused_datapath": row}
+        out.append((f"datapath/fused/modeled/{name}",
+                    float(row["launches_fused"]),
+                    f"launches {row['launches_fused']}f vs "
+                    f"{row['launches_unfused']}u, HBM/bucket "
+                    f"{row['hbm_bytes_fused'] / 2**20:.1f}MiBf vs "
+                    f"{row['hbm_bytes_unfused'] / 2**20:.1f}MiBu "
+                    f"(n=8M W={W})"))
+    merge_bench_json(BENCH_CODECS_JSON, updates)
+    out.append(("datapath/fused/bench_json", 0.0,
+                f"merged fused_datapath for {len(updates)} codecs into "
+                f"{BENCH_CODECS_JSON}"))
     return out
 
 

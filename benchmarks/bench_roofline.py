@@ -3,6 +3,12 @@
 Reads ``results/dryrun`` JSONs (produced by ``repro.launch.dryrun``) and
 emits the three roofline terms, the dominant bottleneck, and the
 useful-FLOP ratio.  This is the §Roofline source of record.
+
+``fused_kernel_rows`` adds the aggregation-datapath memory term with no
+dryrun dependency: per codec KernelSet, the modeled HBM-roofline time
+of one 8M-element bucket under the fused vs unfused pipelines (v5e-ish
+819 GB/s HBM), plus the launch-count delta — the datapath side of the
+same bottleneck story the dryrun tables tell for the model.
 """
 import glob
 import json
@@ -10,13 +16,41 @@ import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
+#: v5e-class HBM bandwidth used for the modeled kernel roofline
+HBM_BYTES_PER_S = 819e9
+
+
+def fused_kernel_rows(n=8 << 20, num_workers=32):
+    """HBM-roofline of the fused vs unfused bucket datapath, per codec."""
+    from repro.fabric import available_codecs, get_codec
+    out = []
+    for name in available_codecs():
+        codec = get_codec(name)
+        hook = getattr(codec, "pallas_kernels", None)
+        ks = hook() if hook is not None else None
+        if ks is None:
+            continue
+        ef = bool(codec.threads_ef)
+        bf = ks.hbm_bytes(n, num_workers=num_workers, fused=True,
+                          distributed=True, ef=ef)
+        bu = ks.hbm_bytes(n, num_workers=num_workers, fused=False,
+                          distributed=True, ef=ef)
+        lf = ks.launches(fused=True, distributed=True, ef=ef)
+        lu = ks.launches(fused=False, distributed=True, ef=ef)
+        out.append((f"roofline/fused_kernels/{name}",
+                    bf / HBM_BYTES_PER_S * 1e6,
+                    f"unfused_us={bu / HBM_BYTES_PER_S * 1e6:.1f} "
+                    f"hbm_ratio={bf / bu:.3f} launches={lf}f/{lu}u "
+                    f"(n=8M W={num_workers})"))
+    return out
+
 
 def rows():
-    out = []
+    out = fused_kernel_rows()
     files = sorted(glob.glob(os.path.join(RESULTS, "*", "*", "*.json")))
     if not files:
-        return [("roofline/no_results", 0.0,
-                 "run: python -m repro.launch.dryrun")]
+        return out + [("roofline/no_results", 0.0,
+                       "run: python -m repro.launch.dryrun")]
     for f in files:
         d = json.load(open(f))
         mesh = d.get("mesh_name", "?")

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .. import kernels as K
-from ..kernels import ref as kref
+from ..kernels import fused as KF
 from .modes import AggregationMode, Schedule
 
 Axes = Sequence[str] | str
@@ -138,17 +138,25 @@ def lowbit_vote_psum(g: jax.Array, dp_axes: Axes, num_workers: int, *,
 def _packed_a2a_local(g: jax.Array, dp_axes: Axes, num_workers: int, *,
                       ternary: bool, gate_phase: int,
                       ef: jax.Array | None, interpret: bool | None,
-                      gate_mask=None):
+                      gate_mask=None, kernels: KF.KernelSet | None = None):
     """Packed aggregation over DP for a *fully local* array.
 
     ``gate_mask`` (host-side boolean (N,) array) overrides the uniform
     flat-index 2-of-3 gate with an arbitrary keep pattern; the fused
     bucket path uses it to carry the concatenation of per-leaf gates.
+    ``kernels`` (a vote-capable :class:`~repro.kernels.fused.KernelSet`)
+    reroutes the whole chain to the codec's fused kernels — bit-identical
+    by the KernelSet contract, fewer launches and no intermediate HBM
+    materialization.
     """
+    if kernels is not None and kernels.votes:
+        return kernels.packed_vote(g, dp_axes, num_workers, ternary=ternary,
+                                   gate_phase=gate_phase, ef=ef,
+                                   interpret=interpret, gate_mask=gate_mask)
     w = num_workers
     n = g.size
     g_eff, ef = _ef_inject(g, ef)
-    plane = kref.to_plane(g_eff.reshape(-1))
+    plane = K.to_plane(g_eff.reshape(-1))
     words = K.pack_signs(plane, interpret=interpret)      # (R, 128) u32
     r = words.shape[0]
     pad_r = (-r) % w
@@ -159,21 +167,13 @@ def _packed_a2a_local(g: jax.Array, dp_axes: Axes, num_workers: int, *,
     # aggregator for each element range.
     routed = jax.lax.all_to_all(words.reshape(w, rw, K.LANE), dp_axes,
                                 split_axis=0, concat_axis=0, tiled=False)
-    # "controller datapath": PopCount across workers + majority/ternary gate.
+    # "controller datapath": PopCount across workers + majority/ternary gate
+    # (the gate helper is shared with the fused driver, so both pipelines
+    # consume byte-identical zero gates by construction).
     counts = K.popcount_stack(routed, interpret=interpret)
-    if ternary:
-        # gate indexed by this shard's element range within the plane
-        my = jax.lax.axis_index(dp_axes)
-        if gate_mask is not None:
-            full = kref.gate_words_from_mask(gate_mask, pad_words=r + pad_r)
-            gate = jax.lax.dynamic_slice_in_dim(full, my * rw, rw, axis=0)
-        else:
-            base = (my * rw * K.PACK * K.LANE + gate_phase) % 3
-            gates = jnp.stack([kref.ternary_gate_words(rw * K.PACK, phase=p)
-                               for p in range(3)])
-            gate = gates[base]
-    else:
-        gate = jnp.full((rw, K.LANE), 0xFFFFFFFF, jnp.uint32)
+    gate = KF.shard_gate_words(dp_axes, rw, ternary=ternary,
+                               gate_phase=gate_phase, gate_mask=gate_mask,
+                               total_rows=r + pad_r)
     sw, mw = K.majority_decode(counts, num_workers=w, gate_words=gate,
                                interpret=interpret)
     # "read response": packed ternary aggregate gathered back to all workers.
@@ -181,23 +181,26 @@ def _packed_a2a_local(g: jax.Array, dp_axes: Axes, num_workers: int, *,
     mw_all = jax.lax.all_gather(mw, dp_axes, axis=0, tiled=True)[:r]
     u_plane = K.unpack_ternary(sw_all, mw_all, dtype=jnp.float32,
                                interpret=interpret)
-    u = kref.from_plane(u_plane, n).reshape(g.shape).astype(g.dtype)
+    u = K.from_plane(u_plane, n).reshape(g.shape).astype(g.dtype)
     return u, _ef_update(g_eff, ef)
 
 
 def lowbit_packed_a2a(g: jax.Array, dp_axes: Axes, num_workers: int, *,
                       model_spec: P | None = None, ternary: bool = False,
                       gate_phase: int = 0, ef: jax.Array | None = None,
-                      interpret: bool | None = None, gate_mask=None):
+                      interpret: bool | None = None, gate_mask=None,
+                      kernels: KF.KernelSet | None = None):
     """Controller-schedule aggregation.
 
     If the leaf is sharded over auto (tensor-parallel) mesh axes,
     ``model_spec`` must give its PartitionSpec; an inner ``shard_map`` makes
     the shard fully local so the Pallas datapath can run on it.
     ``gate_mask`` (fully local payloads only) overrides the flat-index
-    ternary gate — see :func:`_packed_a2a_local`.
+    ternary gate — see :func:`_packed_a2a_local`.  ``kernels`` routes the
+    chain to the codec's fused kernel set when present.
     """
-    kwargs = dict(ternary=ternary, gate_phase=gate_phase, interpret=interpret)
+    kwargs = dict(ternary=ternary, gate_phase=gate_phase, interpret=interpret,
+                  kernels=kernels)
 
     if model_spec is None or all(a is None for a in model_spec):
         return _packed_a2a_local(g, dp_axes, num_workers, ef=ef,

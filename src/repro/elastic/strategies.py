@@ -55,7 +55,7 @@ class LocalAccumCodec(GradientCodec):
     bits_per_element = 0.0
     reduction = "local"
     threads_ef = True
-    lane = CodecLane("fp32_bypass")
+    lane = CodecLane("fp32_bypass", fused=True)  # zero-wire: nothing to stage
     default_schedule = "local_accum"
 
 

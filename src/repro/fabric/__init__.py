@@ -42,7 +42,7 @@ from .hierarchy import (HierarchicalCodec, HopPlan, HopSpec,
                         register_hop_plan, unregister_hop_plan)
 from .session import (CompiledStep, Fabric, TrainState, aggregate_leaf,
                       aggregate_tree, aggregate_tree_bucketed,
-                      dp_num_workers)
+                      dp_num_workers, layout_kernel_stats)
 from .control import (Controller, ControlEvent, FP32Controller,
                       PaperController, Phase, PolicyProgram,
                       StaticController, Telemetry, available_controllers,
@@ -60,6 +60,7 @@ __all__ = [
     "unregister_hop_plan",
     "CompiledStep", "Fabric", "TrainState", "aggregate_leaf",
     "aggregate_tree", "aggregate_tree_bucketed", "dp_num_workers",
+    "layout_kernel_stats",
     "Controller", "ControlEvent", "FP32Controller", "PaperController",
     "Phase", "PolicyProgram", "StaticController", "Telemetry",
     "available_controllers", "get_controller", "make_controller",

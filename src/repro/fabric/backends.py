@@ -35,6 +35,19 @@ from .codecs import get_codec, resolve_leaf_gate_mask, ring_wire_bytes
 from .registry import AggregationContext, get_schedule, register_schedule
 
 
+def _codec_kernels(ctx: AggregationContext, codec):
+    """The codec's fused kernel set, honoring the session opt-out.
+
+    Returns None when the session pinned the staged path
+    (``fused_kernels=False``) or the codec brings no kernels — both
+    bit-identical to the fused realization by the KernelSet contract.
+    """
+    if not getattr(ctx, "fused_kernels", True):
+        return None
+    hook = getattr(codec, "pallas_kernels", None)
+    return None if hook is None else hook()
+
+
 @register_schedule(Schedule.PSUM, "fp32")
 class Fp32AllreduceBackend:
     """Mean transport via XLA psum — the paper's bypass / calibration path.
@@ -51,12 +64,27 @@ class Fp32AllreduceBackend:
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         codec = get_codec(policy.mode)
+        ks = _codec_kernels(ctx, codec)
+        if ks is not None and ks.means:
+            # fused encode kernel on the flat payload (bit-identical to
+            # codec.encode — the KernelSet contract), decode on the mean
+            flat = g.reshape(-1)
+            enc = ks.encode_flat(flat, interpret=ctx.interpret)
+            u = fp32_allreduce(enc.reshape(g.shape), ctx.dp_axes)
+            u = ks.decode_apply(u.reshape(-1), interpret=ctx.interpret)
+            return codec.decode(ctx, u.reshape(g.shape)), ef
         u = codec.decode(ctx, fp32_allreduce(codec.encode(ctx, g),
                                              ctx.dp_axes))
         return u, ef
 
     def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
                        gate=None):
+        ks = _codec_kernels(ctx, codec)
+        if ks is not None and ks.means:
+            enc = ks.encode_flat(flat, interpret=ctx.interpret)
+            u = ks.decode_apply(fp32_allreduce(enc, ctx.dp_axes),
+                                interpret=ctx.interpret)
+            return codec.decode(ctx, u)
         return codec.decode(ctx, fp32_allreduce(codec.encode(ctx, flat),
                                                 ctx.dp_axes))
 
@@ -76,6 +104,12 @@ class VotePsumBackend:
     The codec contributes the majority-stage gate: ``codec.gated``
     selects the ternary leg, and ``codec.leaf_gate_mask`` may supply an
     explicit keep pattern overriding the built-in 2-of-3 one.
+
+    This transport deliberately ignores codec kernel sets: its dense
+    int8 votes have no packed word-plane representation to fuse — the
+    psum *is* the combine, and XLA already fuses the elementwise
+    vote/majority stages around it.  (``fused_kernels`` is therefore a
+    no-op here, trivially bit-identical.)
     """
 
     name = "vote_psum"
@@ -123,6 +157,7 @@ class PackedA2ABackend:
 
     def aggregate(self, ctx: AggregationContext, g, policy, ef=None):
         codec = get_codec(policy.mode)
+        ks = _codec_kernels(ctx, codec)
         # a custom leaf gate packs into gate words exactly like the fused
         # path, so both vote transports zero the same elements (the
         # packed path needs a fully local payload for gate masks)
@@ -132,16 +167,20 @@ class PackedA2ABackend:
             ternary=codec.gated, gate_phase=policy.gate_phase,
             gate_mask=resolve_leaf_gate_mask(codec, g.shape,
                                              policy.gate_phase),
-            ef=ef, interpret=ctx.interpret)
+            ef=ef, interpret=ctx.interpret,
+            kernels=ks if ks is not None and ks.votes else None)
 
     def aggregate_flat(self, ctx: AggregationContext, flat, codec, *,
                        gate=None):
         # the packed schedule needs the host mask to pack gate words
         # (1 bit/element once packed — see gate_words_from_mask)
         mask = None if gate is None else gate.mask()
+        ks = _codec_kernels(ctx, codec)
         u, _ = lowbit_packed_a2a(flat, ctx.dp_axes, ctx.num_workers,
                                  ternary=codec.gated, gate_mask=mask,
-                                 interpret=ctx.interpret)
+                                 interpret=ctx.interpret,
+                                 kernels=ks if ks is not None and ks.votes
+                                 else None)
         return u
 
     def wire_bytes_per_device(self, n_elements: int, mode, num_workers: int,
@@ -205,6 +244,12 @@ class HierarchicalBackend:
     the residual from the injected gradient after the last hop) — the
     exact external pattern the bucket layer uses, so per-leaf, fused,
     and flat-backend EF all stay bit-identical.
+
+    Fused kernels resolve *per hop*: each leg dispatches through its hop
+    codec's own transport with a context that preserves the session's
+    ``fused_kernels`` flag (``dataclasses.replace`` below), so e.g. a
+    packed gbinary backbone hop runs the fused vote chain while the
+    intra-node fp32 hop stays on plain psum — no extra wiring here.
     """
 
     name = "hierarchical"

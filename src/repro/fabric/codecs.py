@@ -88,6 +88,10 @@ class CodecLane:
     initiation_interval: float = 1.0
     #: extra stall cycles charged per flit (gate fetch, bypass hazards).
     stall_cycles_per_flit: float = 0.0
+    #: the lane's stages run as one fused pipeline (the paper's single
+    #: streaming datapath stage); unfused lanes re-fill the pipeline once
+    #: per staged pass (:attr:`repro.sim.datapath.FlitPipeline.unfused_passes`).
+    fused: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,6 +181,9 @@ class GradientCodec:
     ``lane``             — :class:`CodecLane` timing descriptor for the
                            sim's flit pipeline.
     ``default_schedule`` — transport used when a plan names no schedule.
+    ``pallas_kernels``   — optional fused Pallas :class:`~repro.kernels.
+                           fused.KernelSet`; transports consult it when
+                           the session runs with ``fused_kernels=True``.
     """
 
     name: str = "identity"
@@ -184,7 +191,7 @@ class GradientCodec:
     reduction: str = "mean"
     gated: bool = False
     threads_ef: bool = False
-    lane: CodecLane = CodecLane("fp32_bypass")
+    lane: CodecLane = CodecLane("fp32_bypass", fused=True)
     default_schedule: str = "psum"
 
     # -- mean-reduction hooks (psum-style transports) --------------------
@@ -245,6 +252,27 @@ class GradientCodec:
         ``vote_psum``.)
         """
         return None
+
+    # -- fused Pallas kernels (the codec-owned kernel capability) --------
+    def pallas_kernels(self):
+        """The codec's fused :class:`~repro.kernels.fused.KernelSet`.
+
+        ``None`` (the default) keeps the staged / reference-jnp path.
+        Vote codecs return a vote-capable set (the ``packed_a2a``
+        transport hands it the whole bucket); mean codecs return a
+        mean-capable set (the psum transport runs its
+        ``encode_flat``/``decode_apply`` around the collective).  The
+        returned set must be bit-identical to the codec's
+        :meth:`encode`/:meth:`decode` + the staged kernels wherever both
+        run — sessions key compiled steps on :meth:`kernel_signature`,
+        not object identity, so return a stable (cached) instance.
+        """
+        return None
+
+    def kernel_signature(self) -> str | None:
+        """Step-cache key component for the codec's kernel set (or None)."""
+        ks = self.pallas_kernels()
+        return None if ks is None else ks.signature()
 
     # -- accounting ------------------------------------------------------
     def payload_bytes(self, n_elements: int) -> float:
@@ -361,8 +389,12 @@ class GBinaryCodec(GradientCodec):
     bits_per_element = 1.0
     reduction = "vote"
     threads_ef = True
-    lane = CodecLane("sign_count")
+    lane = CodecLane("sign_count", fused=True)
     default_schedule = "vote_psum"
+
+    def pallas_kernels(self):
+        from ..kernels.fused import vote_kernel_set
+        return vote_kernel_set()
 
 
 @register_codec(AggregationMode.G_TERNARY)
@@ -377,7 +409,13 @@ class GTernaryCodec(GradientCodec):
     reduction = "vote"
     gated = True
     threads_ef = True
-    lane = CodecLane("ternary_gated", stall_cycles_per_flit=1.0)
+    lane = CodecLane("ternary_gated", stall_cycles_per_flit=1.0, fused=True)
     default_schedule = "vote_psum"
     # bucket_gate: the base-class default already yields the per-leaf
     # 2-of-3 BucketGate segments (leaf_gate_mask is None everywhere)
+
+    def pallas_kernels(self):
+        # the vote chain is gate-parametric: gbinary and gternary share
+        # one kernel set and differ only in the packed gate operand
+        from ..kernels.fused import vote_kernel_set
+        return vote_kernel_set()

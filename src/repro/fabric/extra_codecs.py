@@ -21,8 +21,16 @@ the fused bucket when bucketed) — matching the paper's bucket-granular
 controller, and the reason these codecs are *semantically* rather than
 bit-for-bit identical across the two paths (the four built-in codecs
 are statistic-free and stay bit-identical).
+
+Both codecs also carry real fused Pallas kernels — again purely through
+the public seam: ``pallas_kernels()`` returns the ``Int4KernelSet`` /
+``TopKKernelSet`` exported by :mod:`repro.kernels`, replacing the
+reference-jnp-only encode with single-launch kernels (bit-identical
+under jit; see DESIGN.md §12).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +39,18 @@ import numpy as np
 from .codecs import CodecLane, GradientCodec, register_codec
 
 __all__ = ["Int4Codec", "TopKCodec"]
+
+
+@functools.lru_cache(maxsize=None)
+def _int4_kernels(levels: float):
+    from ..kernels import Int4KernelSet
+    return Int4KernelSet(levels=levels)
+
+
+@functools.lru_cache(maxsize=None)
+def _topk_kernels(fraction: float):
+    from ..kernels import TopKKernelSet
+    return TopKKernelSet(fraction)
 
 
 @register_codec("int4")
@@ -46,12 +66,15 @@ class Int4Codec(GradientCodec):
 
     name = "int4"
     bits_per_element = 4.0
-    lane = CodecLane("int4_dense")
+    lane = CodecLane("int4_dense", fused=True)
     default_schedule = "psum"
     kv_cache = True
 
     #: symmetric int4 code range: {-7, ..., +7}
     levels = 7.0
+
+    def pallas_kernels(self):
+        return _int4_kernels(self.levels)
 
     def encode(self, ctx, g):
         f = g.astype(jnp.float32)
@@ -95,8 +118,11 @@ class TopKCodec(GradientCodec):
             raise ValueError(f"fraction must be in (0, 1], got {fraction}")
         self.fraction = float(fraction)
         self.name = str(name)
-    lane = CodecLane("sparse_topk")
+    lane = CodecLane("sparse_topk", fused=True)
     default_schedule = "psum"
+
+    def pallas_kernels(self):
+        return _topk_kernels(self.fraction)
 
     @property
     def bits_per_element(self) -> float:

@@ -184,6 +184,29 @@ class HierarchicalCodec(GradientCodec):
                 return c.bucket_gate(bucket)
         return None
 
+    # -- fused kernels: resolved per hop, not for the route -------------
+    def pallas_kernels(self):
+        """None: a multi-hop route has no single kernel set — each hop
+        leg resolves its own codec's kernels inside the hierarchical
+        backend (the hop context preserves ``fused_kernels``)."""
+        return None
+
+    def kernel_signature(self) -> str | None:
+        """Composed per-hop kernel signatures for the step-cache key.
+
+        ``None`` when no hop brings kernels; otherwise one string over
+        the route so swapping any hop codec's kernel set invalidates
+        compiled steps exactly like a flat codec swap would.
+        """
+        sigs = []
+        for hop in self.plan.hops:
+            c = get_codec(hop.codec)
+            hook = getattr(c, "kernel_signature", None)
+            sigs.append(hook() if hook is not None else None)
+        if not any(s is not None for s in sigs):
+            return None
+        return ">".join("-" if s is None else s for s in sigs)
+
 
 def register_hop_plan(plan: HopPlan, *aliases: str,
                       override: bool = False) -> HierarchicalCodec:

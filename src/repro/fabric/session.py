@@ -119,6 +119,82 @@ def _registry_fusable(schedule: str) -> bool:
                             # canonical registry error at dispatch time
 
 
+def _codec_kernel_sig(mode) -> str | None:
+    """A mode's fused-kernel signature, None when it brings no kernels
+    (or is not registered — the dispatch layer raises the real error)."""
+    try:
+        codec = get_codec(mode)
+    except KeyError:
+        return None
+    hook = getattr(codec, "kernel_signature", None)
+    return hook() if hook is not None else None
+
+
+def plan_modes(plan: AdmissionPlan) -> set:
+    """Every codec mode an admission plan can route a leaf to."""
+    return {pol.mode for _, pol in plan.policies} | {plan.default.mode}
+
+
+def layout_kernel_stats(layout: BucketLayout, num_workers: int) -> dict:
+    """Modeled Pallas-launch and HBM-byte accounting for one layout.
+
+    Sums, over every collective launch in ``layout``, the launch count
+    and modeled HBM traffic of the launch codec's
+    :class:`~repro.kernels.fused.KernelSet` under both datapaths —
+    ``fused`` (codec-owned single/merged kernels) and ``unfused`` (the
+    staged reference chain).  Hierarchical routes decompose per hop at
+    that hop's group size.  Launches whose codec brings no kernel set
+    (fp32 psum, custom codecs) count once under ``collectives`` but do
+    not contribute kernel stats — the two paths are identical there.
+
+    Returns ``{"launches_fused", "launches_unfused", "hbm_bytes_fused",
+    "hbm_bytes_unfused", "collectives", "unkernelized"}``.
+    """
+    stats = {"launches_fused": 0, "launches_unfused": 0,
+             "hbm_bytes_fused": 0.0, "hbm_bytes_unfused": 0.0,
+             "collectives": 0, "unkernelized": 0}
+
+    def add(ks, schedule, n, w, ef):
+        if ks is None:
+            stats["unkernelized"] += 1
+            return
+        dist = w > 1
+        if ks.votes and schedule == "packed_a2a":
+            pass
+        elif ks.means and schedule == "psum":
+            ef = False          # mean sets never thread EF in-kernel
+        else:
+            stats["unkernelized"] += 1
+            return
+        for path, fused in (("fused", True), ("unfused", False)):
+            stats[f"launches_{path}"] += ks.launches(
+                fused=fused, distributed=dist, ef=ef)
+            stats[f"hbm_bytes_{path}"] += ks.hbm_bytes(
+                n, num_workers=w, fused=fused, distributed=dist, ef=ef)
+
+    for key, n in layout.launches():
+        stats["collectives"] += 1
+        try:
+            codec = get_codec(key.mode)
+        except KeyError:
+            stats["unkernelized"] += 1
+            continue
+        if getattr(codec, "reduction", "") == "hierarchical":
+            sizes = codec.plan.group_sizes(num_workers)
+            for hop, w in zip(codec.plan.hops, sizes):
+                c = get_codec(hop.codec)
+                hook = getattr(c, "pallas_kernels", None)
+                sched = hop.schedule or c.default_schedule
+                add(hook() if hook is not None else None,
+                    wire_schedule(hop.codec, sched), n, w,
+                    key.error_feedback and c.threads_ef)
+        else:
+            hook = getattr(codec, "pallas_kernels", None)
+            add(hook() if hook is not None else None, key.schedule, n,
+                num_workers, key.error_feedback and codec.threads_ef)
+    return stats
+
+
 def aggregate_tree_bucketed(ctx: AggregationContext, grads: Any,
                             policies: Any, ef_states: Any | None = None, *,
                             layout: BucketLayout | None = None,
@@ -296,7 +372,8 @@ class Fabric:
                  interpret: bool | None = None,
                  num_workers: int | None = None,
                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                 fused: bool = True):
+                 fused: bool = True,
+                 fused_kernels: bool = True):
         self.mesh = mesh
         if dp_axes is None:
             dp_axes = ("data",) if mesh is not None else ()
@@ -312,6 +389,12 @@ class Fabric:
             self.num_workers = 1
         self.bucket_bytes = int(bucket_bytes)
         self.fused = bool(fused)
+        # fused_kernels routes codec payloads through their registered
+        # Pallas KernelSet (repro.kernels.fused) — one kernel per bucket
+        # for encode -> vote/reduce -> decode(+EF) instead of the staged
+        # four-op chain.  Bit-identical either way; False pins the
+        # staged pipeline (debugging / A-B validation).
+        self.fused_kernels = bool(fused_kernels)
         self.membership_epoch = 0        # bumped by bind_membership
         self.controller = None           # attached admission controller
         self._compiled: dict[tuple, CompiledStep] = {}
@@ -368,7 +451,8 @@ class Fabric:
     def context(self) -> AggregationContext:
         return AggregationContext(dp_axes=self.dp_axes,
                                   num_workers=self.num_workers,
-                                  interpret=self.interpret, mesh=self.mesh)
+                                  interpret=self.interpret, mesh=self.mesh,
+                                  fused_kernels=self.fused_kernels)
 
     def resolve(self, params_like: Any, plan: AdmissionPlan,
                 pspecs: Any | None = None) -> Any:
@@ -434,7 +518,8 @@ class Fabric:
         modes = {codec_name(p.mode) for p in pol_leaves}
         codec_sig = tuple(sorted(
             (m, get_codec(m).reduction, bool(get_codec(m).gated),
-             getattr(get_codec(m), "hop_signature", None))
+             getattr(get_codec(m), "hop_signature", None),
+             _codec_kernel_sig(m))
             for m in modes))
         key = (treedef,
                tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
@@ -666,9 +751,14 @@ class Fabric:
         # num_workers + membership epoch: a step compiled for one worker
         # view must never be served after an elastic re-plan, even when
         # the rejoined view happens to have the same worker count
+        # fused_kernels + the plan modes' kernel signatures: a step
+        # compiled against one kernel set must never be served after a
+        # codec (or its kernels) is swapped under the same name
+        kern_sig = tuple(sorted(
+            (codec_name(m), _codec_kernel_sig(m)) for m in plan_modes(plan)))
         key = (plan.signature(), with_diagnostics, zero1, grad_accum,
-               cfg, optimizer, loss, use_fused,
-               self.num_workers, self.membership_epoch)
+               cfg, optimizer, loss, use_fused, self.fused_kernels,
+               kern_sig, self.num_workers, self.membership_epoch)
         if key not in self._compiled:
             self._compiled[key] = self.build_step(
                 cfg, optimizer, plan, params_like,

@@ -27,7 +27,8 @@ from .apply_update import (unpack_ternary as _unpack_pallas,
 __all__ = [
     "interpret_default", "pack_signs", "popcount_stack", "majority_decode",
     "unpack_ternary", "apply_sign_update", "ternary_gate_words",
-    "to_plane", "from_plane", "padded_len", "LANE", "PACK",
+    "gate_words_from_mask", "to_plane", "from_plane", "padded_len",
+    "LANE", "PACK",
 ]
 
 
@@ -104,3 +105,8 @@ def apply_sign_update(param_plane: jax.Array, sign_words: jax.Array,
 def ternary_gate_words(num_rows: int, phase: int = 0) -> jax.Array:
     """Packed fixed 2-of-3 zero-gate pattern (Section 2 of the paper)."""
     return ref.ternary_gate_words(num_rows, phase)
+
+
+def gate_words_from_mask(keep, pad_words: int | None = None) -> jax.Array:
+    """Arbitrary flat keep mask -> packed gate word plane (host-side)."""
+    return ref.gate_words_from_mask(keep, pad_words=pad_words)

@@ -186,6 +186,84 @@ def apply_sign_update(param_plane: jax.Array, sign_words: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# fused-stage references (oracles for repro.kernels.fused)
+# ---------------------------------------------------------------------------
+#
+# Each function below is the pure-jnp composition the corresponding fused
+# Pallas kernel must reproduce bit-for-bit.  They are deliberately written
+# as compositions of the staged references above wherever one exists, so
+# "fused == ref" transitively proves "fused == staged pipeline".
+
+def encode_pack_ef(g_plane: jax.Array, e_plane: jax.Array):
+    """EF inject + sign pack in one step: (words, g_eff plane).
+
+    g_eff = g + e (the error-feedback inject); the words are the packed
+    signs of g_eff.  Reference for the fused encode kernel.
+    """
+    g_eff = g_plane + e_plane
+    return sign_pack(g_eff), g_eff
+
+
+def vote_combine(routed: jax.Array, num_workers: int,
+                 gate_words: jax.Array):
+    """(W, R, LANE) routed sign words -> ternary packed pair, one step.
+
+    Composition of :func:`popcount_stack` and :func:`majority_decode` —
+    the fused combine kernel skips the (M, LANE) int32 counts
+    materialization between them.
+    """
+    counts = popcount_stack(routed)
+    return majority_decode(counts, num_workers, gate_words=gate_words)
+
+
+def vote_pipeline_dense(stack: jax.Array, num_workers: int,
+                        gate_words: jax.Array) -> jax.Array:
+    """(W, M, LANE) value planes -> decoded ternary value plane (M, LANE).
+
+    The whole local (no-collective) vote datapath in one step:
+    encode -> popcount -> majority -> decode, never leaving registers in
+    the fused kernel.  Reference composition of the staged kernels.
+    """
+    packed = jnp.stack([sign_pack(stack[w]) for w in range(stack.shape[0])])
+    sw, mw = vote_combine(packed, num_workers, gate_words)
+    return unpack_ternary(sw, mw, dtype=jnp.float32)
+
+
+def ef_residual(plane: jax.Array, beta) -> jax.Array:
+    """EF residual update on a value plane: x - beta * sgn(x).
+
+    Reference for the fused residual kernel; elementwise-identical to
+    the unfused ``g_eff - beta * jnp.sign(g_eff)`` on the leaf shape.
+    """
+    b = jnp.asarray(beta, plane.dtype)
+    return plane - b * jnp.sign(plane)
+
+
+def int4_quant_plane(plane: jax.Array, levels: float = 7.0) -> jax.Array:
+    """Absmax-scaled int4 fake-quant of a float32 value plane.
+
+    Same math as ``Int4Codec.encode``: one global absmax scale over the
+    plane, round-to-nearest into [-levels, levels], dequantize.  The
+    canonical zero padding never changes the absmax, so quantizing the
+    padded plane is bit-identical to quantizing the flat bucket.
+    """
+    scale = jnp.max(jnp.abs(plane)) / levels
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(plane / safe), -levels, levels)
+    return q * safe
+
+
+def threshold_mask_plane(plane: jax.Array, thresh) -> jax.Array:
+    """Magnitude sparsification: keep x where |x| >= thresh, else 0.
+
+    Same comparison as ``TopKCodec.encode`` (threshold precomputed from
+    the top-k magnitude); reference for the fused top-k mask kernel.
+    """
+    t = jnp.asarray(thresh, plane.dtype)
+    return jnp.where(jnp.abs(plane) >= t, plane, jnp.zeros((), plane.dtype))
+
+
+# ---------------------------------------------------------------------------
 # end-to-end oracle (paper Section 2, all workers -> aggregate values)
 # ---------------------------------------------------------------------------
 

@@ -61,6 +61,12 @@ class FlitPipeline:
     stages: int = PIPELINE_STAGES
     worker_ports: int = 64
     miss_stall_cycles: float = 0.0
+    #: pipeline fills charged to a lane whose codec does *not* fuse its
+    #: encode -> combine -> decode chain into one kernel
+    #: (``CodecLane.fused=False``): each staged pass re-fills the
+    #: pipeline.  Every built-in lane is fused, so the default model is
+    #: unchanged; only a deliberately-unfused custom lane pays it.
+    unfused_passes: int = 4
 
     def lane(self, mode: AggregationMode | str) -> LaneSpec:
         """Lane descriptor for a codec name — from the codec registry.
@@ -89,9 +95,10 @@ class FlitPipeline:
         fanin = max(1, math.ceil(num_workers / self.worker_ports))
         ii = lane.initiation_interval * fanin
         stall = (lane.stall_cycles_per_flit + self.miss_stall_cycles)
+        fills = 1 if lane.fused else self.unfused_passes
         return {
             "flits": float(flits),
-            "fill_cycles": float(self.stages),
+            "fill_cycles": float(self.stages * fills),
             "issue_cycles": (flits - 1) * ii + 1.0,
             "stall_cycles": flits * stall,
             "initiation_interval": ii,

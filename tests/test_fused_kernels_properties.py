@@ -1,0 +1,98 @@
+"""Hypothesis round trips for the fused Pallas kernels.
+
+The property under test: for every codec that brings a fused kernel
+set, the kernel path reproduces the staged reference path **bit for
+bit** on ragged (non-tile-multiple) sizes and across the worker-count
+sweep W in {3, 31, 128, 256}, error feedback on and off.  The reference
+side is always jitted — bit-identity is a claim about compiled
+programs; XLA CPU rounds one eager scalar division differently from
+the jitted equivalent (DESIGN.md section 12).
+
+Separate module from tests/test_fused_kernels.py so environments
+without the optional hypothesis dependency still run the deterministic
+fused-kernel suite (module-level importorskip skips whole files).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fabric import get_codec
+from repro.kernels import Int4KernelSet, TopKKernelSet, fused, ref
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dependency (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+#: the satellite's worker-count sweep (odd, large, power-of-two, > ports)
+W_SWEEP = [3, 31, 128, 256]
+
+#: ragged element counts — never a tile multiple unless by accident
+_sizes = st.integers(min_value=1, max_value=3 * 4096 + 17)
+
+
+@st.composite
+def _flat_values(draw, sizes=_sizes):
+    n = draw(sizes)
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return np.random.RandomState(seed).randn(n).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(vals=_flat_values())
+def test_hyp_int4_kernel_roundtrip(vals):
+    plane = ref.to_plane(jnp.asarray(vals))
+    want = jax.jit(ref.int4_quant_plane)(plane)
+    got = fused.int4_quant_plane(plane, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # codec-level: Int4KernelSet.encode_flat == Int4Codec.encode in one
+    # jit program (the production configuration)
+    ks = Int4KernelSet()
+    codec = get_codec("int4")
+    flat = jnp.asarray(vals)
+    enc_k = jax.jit(lambda x: ks.encode_flat(x, interpret=True))(flat)
+    enc_c = jax.jit(lambda x: codec.encode(None, x))(flat)
+    np.testing.assert_array_equal(np.asarray(enc_k), np.asarray(enc_c))
+
+
+@settings(max_examples=20, deadline=None)
+@given(vals=_flat_values())
+def test_hyp_topk_kernel_roundtrip(vals):
+    ks = TopKKernelSet(1 / 16)
+    codec = get_codec("topk")
+    flat = jnp.asarray(vals)
+    enc_k = jax.jit(lambda x: ks.encode_flat(x, interpret=True))(flat)
+    enc_c = jax.jit(lambda x: codec.encode(None, x))(flat)
+    np.testing.assert_array_equal(np.asarray(enc_k), np.asarray(enc_c))
+
+
+@settings(max_examples=15, deadline=None)
+@given(vals=_flat_values(sizes=st.integers(min_value=1, max_value=2000)),
+       w=st.sampled_from(W_SWEEP),
+       ternary=st.booleans(), phase=st.integers(min_value=0, max_value=2),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hyp_vote_pipeline_roundtrip(vals, w, ternary, phase, seed):
+    n = vals.shape[0]
+    stack_vals = np.random.RandomState(seed).randn(w, n).astype(np.float32)
+    stack_vals[0] = vals                        # ragged hypothesis payload
+    stack = jnp.stack([ref.to_plane(jnp.asarray(stack_vals[i]))
+                       for i in range(w)])
+    gate = fused.local_gate_words(stack.shape[1] // ref.PACK,
+                                  ternary=ternary, gate_phase=phase)
+    want = jax.jit(ref.vote_pipeline_dense, static_argnums=1)(
+        stack, w, gate).astype(jnp.float32)
+    got = fused.vote_pipeline(stack, gate, num_workers=w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(max_examples=15, deadline=None)
+@given(vals=_flat_values(),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hyp_encode_pack_ef_roundtrip(vals, seed):
+    e_vals = np.random.RandomState(seed).randn(vals.shape[0])
+    g = ref.to_plane(jnp.asarray(vals))
+    e = ref.to_plane(jnp.asarray(e_vals, jnp.float32))
+    want_w, want_g = jax.jit(ref.encode_pack_ef)(g, e)
+    got_w, got_g = fused.encode_pack_ef(g, e, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_w), np.asarray(got_w))
+    np.testing.assert_array_equal(np.asarray(want_g), np.asarray(got_g))
